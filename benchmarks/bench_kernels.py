@@ -1,0 +1,75 @@
+"""Kernel benches: Pallas (interpret) vs pure-jnp oracle — max error across
+a shape sweep, plus the analytic VMEM working set per block config (the
+quantity the BlockSpec tiling is chosen to bound; CPU wall-clock of
+interpret mode is not meaningful, see DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nat_compress import nc_pack, nc_unpack
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _vmem_flash(bq, bk, dh):
+    # q tile + k tile + v tile + acc + m + l, fp32
+    return 4 * (bq * dh + 2 * bk * dh + bq * dh + 2 * bq)
+
+
+def _vmem_ssd(Q, P, N):
+    # xe + b + c + state + (Q,Q) att/scores, fp32
+    return 4 * (Q * P + 2 * Q * N + N * P + 2 * Q * Q)
+
+
+def main(argv=None) -> list:
+    rows = []
+
+    for (B, S, T, Hq, Hk, dh) in [(1, 256, 256, 8, 2, 64),
+                                  (1, 512, 512, 4, 4, 128)]:
+        kq, kk, kv = jax.random.split(KEY, 3)
+        q = jax.random.normal(kq, (B, S, Hq, dh))
+        k = jax.random.normal(kk, (B, T, Hk, dh))
+        v = jax.random.normal(kv, (B, T, Hk, dh))
+        out = flash_attention(q, k, v, interpret=True)
+        ref = R.attention_ref(q, k, v)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        for bq, bk in ((128, 128), (256, 256)):
+            rows.append((f"flash_B{B}S{S}H{Hq}d{dh}_blk{bq}x{bk}", err,
+                         _vmem_flash(bq, bk, dh)))
+
+    for (B, S, H, P, N, Q) in [(1, 256, 4, 64, 64, 128),
+                               (1, 512, 2, 64, 64, 128)]:
+        ks = jax.random.split(KEY, 4)
+        xe = jax.random.normal(ks[0], (B, S, H, P))
+        loga = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.1
+        b = jax.random.normal(ks[2], (B, S, N))
+        c = jax.random.normal(ks[3], (B, S, N))
+        y, f = ssd_scan(xe, loga, b, c, chunk=Q, interpret=True)
+        yr, fr = R.ssd_ref(xe, loga, b, c)
+        err = float(jnp.max(jnp.abs(y - yr)))
+        rows.append((f"ssd_B{B}S{S}H{H}P{P}N{N}_Q{Q}", err,
+                     _vmem_ssd(Q, P, N)))
+
+    x = jax.random.normal(KEY, (4096,)) * 5
+    packed = nc_pack(x, jax.random.PRNGKey(1), interpret=True)
+    y = nc_unpack(packed, interpret=True)
+    ratio = np.abs(np.asarray(y)) / np.clip(np.abs(np.asarray(x)), 1e-9, None)
+    rows.append(("nc_roundtrip_ratio_max", float(ratio.max()), 256 * 128 * 8))
+    rows.append(("nc_wire_compression_x", 4.0, 0))
+
+    print("name,max_err_or_metric,vmem_bytes")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.2e},{r[2]}")
+    vmem_limit = 16 * 2**20
+    assert all(r[2] < vmem_limit for r in rows), "a tile exceeds VMEM"
+    print(f"# all working sets < 16 MiB VMEM: True")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""MoE routing modes (EXPERIMENTS.md §Perf iteration 1, reproducible):
+compiled FLOPs / bytes of the MoE layer under global (survey-era,
+groups=1) vs group-wise (GShard, groups=B) routing, plus analytic expert
+FLOPs for reference.  Single-device AOT — no mesh needed to see the
+dispatch-bookkeeping blowup, it is visible in raw op counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp as M
+from repro.models.common import abstract_params
+from repro.models.config import ModelConfig
+
+
+def _cost(fn, *abstract_args):
+    c = jax.jit(fn).lower(*abstract_args).compile()
+    ca = c.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))
+
+
+def main(argv=None) -> list:
+    cfg = ModelConfig(arch_type="moe", d_model=512, num_experts=32,
+                      top_k=4, expert_d_ff=512, d_ff=512,
+                      activation="swiglu", param_dtype="bfloat16",
+                      compute_dtype="bfloat16")
+    B, S = 16, 1024
+    p_abs = abstract_params(M.moe_descs(cfg))
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+
+    rows = []
+    for name, groups in (("global_g1", 1), ("groupwise_gB", B)):
+        def fwd(p, x, g=groups):
+            y, aux = M.moe(p, x, cfg, groups=g)
+            return y, aux
+        flops, byts = _cost(fwd, p_abs, x_abs)
+        rows.append((name, flops, byts))
+
+    C = M.moe_capacity(cfg, S)  # per-group (n = S tokens)
+    analytic = 2 * B * cfg.num_experts * C * cfg.d_model * cfg.expert_d_ff * 3
+    rows.append(("analytic_expert_matmuls", analytic, 0))
+
+    print("name,flops,bytes")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.4e},{r[2]:.4e}")
+    g1 = rows[0]
+    gb = rows[1]
+    print(f"# group-wise/global flops ratio: {gb[1]/g1[1]:.2f} "
+          f"(single-device; the SPMD-partitioned gap is ~140x, "
+          f"see EXPERIMENTS.md §Perf)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

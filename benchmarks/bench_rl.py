@@ -1,0 +1,94 @@
+"""Paper Table 4 (distributed DRL): final return, rounds and learner
+throughput for GORILA / Ape-X / A3C / IMPALA / DPPO on the chain env,
+plus the V-trace-vs-staleness ablation (IMPALA's claim)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.rl import agents as AG
+from repro.rl.env import ChainEnv, episode_return
+
+ENV = ChainEnv(length=8, horizon=24)
+KEY = jax.random.PRNGKey(0)
+ACTORS = 4
+
+
+def _ret(params, policy_fn):
+    return float(episode_return(ENV, params, policy_fn,
+                                jax.random.PRNGKey(99)))
+
+
+def main(argv=None) -> list:
+    rows = []
+
+    def bench(name, run):
+        t0 = time.time()
+        ret, rounds, steps_per_round = run()
+        dt = time.time() - t0
+        env_steps = rounds * steps_per_round * ACTORS
+        rows.append((name, ret, rounds, env_steps / dt, dt))
+
+    def gorila(prioritized, rounds=300, seed=5 if True else 0):
+        def run():
+            state = AG.q_init(ENV, KEY, actors=ACTORS)
+            key = jax.random.PRNGKey(5 if prioritized else 0)
+            for _ in range(rounds):
+                key, k = jax.random.split(key)
+                state, _ = AG.gorila_round(state, k, env=ENV,
+                                           prioritized=prioritized)
+            return _ret(state.params, AG.greedy_q_policy), rounds, 16
+        return run
+
+    bench("gorila", gorila(False))
+    bench("apex_prioritized", gorila(True, rounds=400))
+
+    def a3c():
+        params = AG.ac_init(KEY, ENV.obs_dim, ENV.num_actions)
+        states = jax.vmap(ENV.reset)(jax.random.split(KEY, ACTORS))
+        key = jax.random.PRNGKey(2)
+        for _ in range(400):
+            key, k = jax.random.split(key)
+            params, states, _ = AG.a3c_round(params, states, k, env=ENV)
+        return _ret(params, AG.policy_logits), 400, 16
+    bench("a3c", a3c)
+
+    def impala(use_vtrace, refresh=8):
+        def run():
+            params = AG.ac_init(KEY, ENV.obs_dim, ENV.num_actions)
+            actor_params = params
+            states = jax.vmap(ENV.reset)(jax.random.split(KEY, ACTORS))
+            key = jax.random.PRNGKey(3)
+            for i in range(400):
+                key, k = jax.random.split(key)
+                params, states, _ = AG.impala_round(
+                    params, actor_params, states, k, env=ENV,
+                    use_vtrace=use_vtrace)
+                if (i + 1) % refresh == 0:
+                    actor_params = params
+            return _ret(params, AG.policy_logits), 400, 16
+        return run
+
+    bench("impala_vtrace_stale8", impala(True))
+    bench("impala_no_vtrace_stale8", impala(False))
+
+    def dppo():
+        params = AG.ac_init(KEY, ENV.obs_dim, ENV.num_actions)
+        states = jax.vmap(ENV.reset)(jax.random.split(KEY, ACTORS))
+        key = jax.random.PRNGKey(4)
+        for _ in range(150):
+            key, k = jax.random.split(key)
+            params, states, _ = AG.dppo_round(params, states, k, env=ENV)
+        return _ret(params, AG.policy_logits), 150, 16
+    bench("dppo", dppo)
+
+    print("name,final_return,rounds,env_steps_per_s,wall_s")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.3f},{r[2]},{r[3]:.0f},{r[4]:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Paper Table 3 (distributed deep learning / data parallelism):
+communication bytes vs convergence for every surveyed technique on a
+controlled least-squares problem.  CSV: name,comm_bytes,bottleneck_bytes,
+final_loss,steps.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import data_parallel as DP
+from repro.optim.optimizers import sgd_momentum
+
+KEY = jax.random.PRNGKey(0)
+W, DIM, NDATA, STEPS = 4, 16, 512, 120
+
+
+def _problem():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    w_true = jax.random.normal(k1, (DIM,))
+    X = jax.random.normal(k2, (NDATA, DIM))
+    y = X @ w_true + 0.01 * jax.random.normal(k3, (NDATA,))
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    return loss_fn, X, y
+
+
+def main(argv=None) -> list:
+    loss_fn, X, y = _problem()
+    n = NDATA // W
+    shards = {"x": X[: n * W].reshape(W, n, DIM),
+              "y": y[: n * W].reshape(W, n)}
+    full = {"x": X, "y": y}
+    p0 = {"w": jnp.zeros((DIM,))}
+    rows = []
+
+    for mode in ("allreduce", "ps"):
+        opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+        p, st = p0, opt.init(p0)
+        comm = bn = 0
+        for _ in range(STEPS):
+            p, st, m = DP.sync_step(loss_fn, p, opt, st, shards, mode=mode)
+            comm += int(m["comm_bytes"])
+            bn += int(m["bottleneck_link_bytes"])
+        rows.append((f"ssgd_{mode}", comm, bn, float(loss_fn(p, full)), STEPS))
+
+    opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+    p, st, key = p0, opt.init(p0), KEY
+    comm = bn = 0
+    for _ in range(STEPS):
+        key, k = jax.random.split(key)
+        p, st, m = DP.sync_step(loss_fn, p, opt, st, shards, compress_key=k)
+        comm += int(m["comm_bytes"])
+        bn += int(m["bottleneck_link_bytes"])
+    rows.append(("ssgd_natural_compression", comm, bn,
+                 float(loss_fn(p, full)), STEPS))
+
+    K = 4
+    nk = NDATA // (W * K)
+    shards_k = {"x": X[: nk * W * K].reshape(W, K, nk, DIM),
+                "y": y[: nk * W * K].reshape(W, K, nk)}
+    opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+    p_w = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), p0)
+    st_w = jax.vmap(opt.init)(p_w)
+    comm = 0
+    for _ in range(STEPS // K):
+        p_w, st_w, m = DP.local_sgd_round(loss_fn, p_w, opt, st_w, shards_k)
+        comm += int(m["comm_bytes"])
+    p = jax.tree_util.tree_map(lambda t: t[0], p_w)
+    rows.append((f"local_sgd_K{K}", comm, comm, float(loss_fn(p, full)),
+                 STEPS))
+
+    cfg = DP.EASGDConfig(lr=0.05, rho=0.5)
+    p_w = {"w": 0.1 * jax.random.normal(KEY, (W, DIM))}
+    center = {"w": jnp.zeros((DIM,))}
+    comm = 0
+    for _ in range(STEPS // 2):
+        p_w, center, m = DP.easgd_round(loss_fn, p_w, center, shards_k, cfg)
+        comm += int(m["comm_bytes"])
+    rows.append(("easgd", comm, comm, float(loss_fn(center, full)),
+                 STEPS // 2 * K))
+
+    p_w = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), p0)
+    b_w = p_w
+    comm = 0
+    for i in range(STEPS):
+        p_w, b_w, m = DP.detsgrad_step(loss_fn, p_w, b_w, jnp.int32(i),
+                                       shards, lr=0.05, c0=0.5)
+        comm += int(m["comm_bytes"])
+    p = jax.tree_util.tree_map(lambda t: jnp.mean(t, 0), p_w)
+    rows.append(("detsgrad", comm, comm, float(loss_fn(p, full)), STEPS))
+
+    # DBS: straggler time, uniform vs throughput-proportional split
+    rates = jnp.array([1.0, 1.0, 2.0, 4.0])
+    split = DP.dbs_partition(rates, 256)
+    t_u = float(DP.dbs_epoch_time(rates, jnp.full((4,), 64.0)))
+    t_d = float(DP.dbs_epoch_time(rates, split.astype(jnp.float32)))
+    rows.append(("dbs_straggler_speedup", 0, 0, t_u / t_d, 1))
+
+    # HYPAR (ref 87): hybrid layer-wise partition vs pure data/model
+    from repro.core.hypar import (hypar_partition, pure_cost,
+                                  transformer_layer_costs, LayerCost)
+    # VGG-style mix (HYPAR's own benchmark family): activation-fat early
+    # conv layers + weight-fat FC head
+    layers = [LayerCost("conv1", 64 * 9 * 3, 64 * 224 * 224 * 64),
+              LayerCost("conv2", 128 * 9 * 64, 64 * 112 * 112 * 128),
+              LayerCost("conv3", 256 * 9 * 128, 64 * 56 * 56 * 256),
+              LayerCost("fc1", 25088 * 4096, 64 * 4096),
+              LayerCost("fc2", 4096 * 4096, 64 * 4096)]
+    path, c_hybrid = hypar_partition(layers, W=8)
+    c_d = pure_cost(layers, "D", 8)
+    c_m = pure_cost(layers, "M", 8)
+    assert c_hybrid <= min(c_d, c_m)
+    rows.append(("hypar_hybrid_bytes", int(c_hybrid), int(c_hybrid),
+                 min(c_d, c_m) / c_hybrid, 1))
+    rows.append(("hypar_pure_data_bytes", int(c_d), int(c_d), 1.0, 1))
+    rows.append(("hypar_pure_model_bytes", int(c_m), int(c_m), 1.0, 1))
+
+    print("name,comm_bytes,bottleneck_bytes,final_loss_or_speedup,steps")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]},{r[3]:.6f},{r[4]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Roofline report: renders the dry-run JSON (benchmarks/results/) into the
+§Roofline table — three terms, bottleneck, useful-FLOP ratio — per
+(arch x shape) on the single-pod mesh, plus the multi-pod scaling check.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def load(mesh: str) -> dict:
+    path = RESULTS / f"dryrun_{mesh}.json"
+    if not path.exists():
+        raise SystemExit(f"{path} missing - run repro.launch.dryrun first")
+    return json.loads(path.read_text())
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def rows_for(mesh: str):
+    data = load(mesh)
+    rows = []
+    for key in sorted(data):
+        r = data[key]
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "skipped", "why": r.get("reason", "")})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "FAIL", "why": r.get("error", "")[:80]})
+            continue
+        # recompute the collective term from the stored per-op bytes with
+        # the ring-weighted model (repro.core.roofline.COLL_WEIGHTS), so
+        # old JSONs pick up accounting fixes without recompiling
+        from repro.core.roofline import ICI_BW, weighted_coll_bytes
+        tx = (weighted_coll_bytes(r["coll_by_op"]) / ICI_BW
+              if r.get("coll_by_op") else r["t_collective"])
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": tx}
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "tc": r["t_compute"], "tm": r["t_memory"],
+            "tx": tx, "bottleneck": max(terms, key=terms.get),
+            "useful": r["useful_ratio"],
+            "step_lb": max(terms.values()),
+            "mem_gb": (r.get("argument_bytes", 0) + r.get("temp_bytes", 0))
+            / 2**30,
+        })
+    return rows
+
+
+def print_table(mesh: str, markdown: bool = False) -> None:
+    rows = rows_for(mesh)
+    if markdown:
+        print(f"\n### Roofline — mesh {mesh}\n")
+        print("| arch | shape | T_compute | T_memory | T_collective |"
+              " bottleneck | useful | step LB | mem/chip |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']} ({r['why']}) | — | — | — |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['tc'])} | "
+                  f"{fmt_s(r['tm'])} | {fmt_s(r['tx'])} | "
+                  f"**{r['bottleneck']}** | {r['useful']:.2f} | "
+                  f"{fmt_s(r['step_lb'])} | {r['mem_gb']:.2f} GB |")
+        return
+    print(f"\nroofline [{mesh}]  "
+          f"({sum(1 for r in rows if r['status']=='ok')} ok / {len(rows)})")
+    hdr = (f"{'arch':22s} {'shape':12s} {'T_comp':>8s} {'T_mem':>8s} "
+           f"{'T_coll':>8s} {'bneck':>10s} {'useful':>7s} {'mem':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['status']}: "
+                  f"{r['why'][:50]}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {fmt_s(r['tc']):>8s} "
+              f"{fmt_s(r['tm']):>8s} {fmt_s(r['tx']):>8s} "
+              f"{r['bottleneck']:>10s} {r['useful']:7.2f} "
+              f"{r['mem_gb']:7.2f}G")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16",
+                    choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    meshes = ["16x16", "2x16x16"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        print_table(m, args.markdown)
+
+
+if __name__ == "__main__":
+    main()

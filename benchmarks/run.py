@@ -1,0 +1,90 @@
+"""Benchmark orchestrator: one section per paper table + the roofline
+report from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only rl  # one section
+
+Sections:
+  techniques : Table 3 — data-parallel techniques (comm vs loss)
+  classic    : Tables 1-2 — boosting / SVM / k-means / fuzzy c-means
+  rl         : Table 4 — GORILA / Ape-X / A3C / IMPALA / DPPO
+  pipeline   : §Pipelining — bubble fraction + GPipe equivalence (8-dev CPU)
+  kernels    : Pallas kernels vs oracles + VMEM working sets
+  moe_routing: global vs group-wise MoE routing costs (§Perf iteration 1)
+  roofline   : §Roofline report from benchmarks/results/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SECTIONS = ["techniques", "classic", "rl", "pipeline", "kernels",
+            "moe_routing", "roofline"]
+
+
+def _banner(name: str) -> None:
+    print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+
+
+def _run_inproc(name: str) -> None:
+    _banner(name)
+    t0 = time.time()
+    if name == "techniques":
+        from benchmarks import bench_techniques as m
+    elif name == "classic":
+        from benchmarks import bench_classic as m
+    elif name == "rl":
+        from benchmarks import bench_rl as m
+    elif name == "kernels":
+        from benchmarks import bench_kernels as m
+    elif name == "moe_routing":
+        from benchmarks import bench_moe_routing as m
+    elif name == "roofline":
+        from benchmarks import roofline as m
+        m.main(["--mesh", "both"])
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+        return
+    else:
+        raise ValueError(name)
+    m.main()
+    print(f"[{name}: {time.time()-t0:.1f}s]")
+
+
+def _run_pipeline_subproc() -> None:
+    """pipeline bench needs an 8-device CPU mesh -> fresh process."""
+    _banner("pipeline")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = f"{ROOT/'src'}:{ROOT}"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_pipeline"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900)
+    print(proc.stdout, end="")
+    if proc.returncode != 0:
+        print(proc.stderr[-2000:])
+        raise SystemExit("pipeline bench failed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    args = ap.parse_args()
+    todo = [args.only] if args.only else SECTIONS
+    t0 = time.time()
+    for name in todo:
+        if name == "pipeline":
+            _run_pipeline_subproc()
+        else:
+            _run_inproc(name)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill once, decode many.
+
+Exercises the production decode path (`decode_step` against a KV/state
+cache) for three architecture families — dense (KV cache), SSM (O(1)
+recurrent state), hybrid (SSM state + shared-attention KV).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve
+
+for arch in ("qwen3-0.6b", "rwkv6-1.6b", "zamba2-1.2b"):
+    print(f"\n=== {arch} (reduced variant) ===")
+    serve(["--arch", arch, "--smoke", "--batch", "4",
+           "--prompt-len", "64", "--gen", "16"])

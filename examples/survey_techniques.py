@@ -1,0 +1,109 @@
+"""The survey's data-parallel techniques, head-to-head on one problem.
+
+Reproduces the qualitative claims of §Distributed deep learning / data
+parallelism: communication bytes vs final loss for synchronous SGD
+(all-reduce and parameter-server aggregation), local SGD, EASGD,
+event-triggered DETSGRAD, and natural gradient compression.
+
+  PYTHONPATH=src python examples/survey_techniques.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import data_parallel as DP
+from repro.optim.optimizers import sgd_momentum
+
+KEY = jax.random.PRNGKey(0)
+W, DIM, NDATA, STEPS = 4, 16, 512, 120
+
+k1, k2, k3 = jax.random.split(KEY, 3)
+w_true = jax.random.normal(k1, (DIM,))
+X = jax.random.normal(k2, (NDATA, DIM))
+y = X @ w_true + 0.01 * jax.random.normal(k3, (NDATA,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+
+n = NDATA // W
+shards = {"x": X[: n * W].reshape(W, n, DIM), "y": y[: n * W].reshape(W, n)}
+full = {"x": X, "y": y}
+params0 = {"w": jnp.zeros((DIM,))}
+rows = []
+
+# --- synchronous S-SGD, all-reduce vs parameter-server aggregation ---
+for mode in ("allreduce", "ps"):
+    opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+    p, st = params0, opt.init(params0)
+    comm = bottleneck = 0
+    for _ in range(STEPS):
+        p, st, m = DP.sync_step(loss_fn, p, opt, st, shards, mode=mode)
+        comm += int(m["comm_bytes"])
+        bottleneck += int(m["bottleneck_link_bytes"])
+    rows.append((f"S-SGD ({mode})", comm, bottleneck,
+                 float(loss_fn(p, full))))
+
+# --- natural compression on the wire ---
+opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+p, st, key = params0, opt.init(params0), KEY
+comm = bottleneck = 0
+for _ in range(STEPS):
+    key, k = jax.random.split(key)
+    p, st, m = DP.sync_step(loss_fn, p, opt, st, shards, compress_key=k)
+    comm += int(m["comm_bytes"])
+    bottleneck += int(m["bottleneck_link_bytes"])
+rows.append(("S-SGD + nat. compression", comm, bottleneck,
+             float(loss_fn(p, full))))
+
+# --- local SGD (K local steps between syncs) ---
+K = 4
+nk = NDATA // (W * K)
+shards_k = {"x": X[: nk * W * K].reshape(W, K, nk, DIM),
+            "y": y[: nk * W * K].reshape(W, K, nk)}
+opt = sgd_momentum(lambda s: 0.05, momentum=0.0)
+p_w = jax.tree_util.tree_map(
+    lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), params0)
+st_w = jax.vmap(opt.init)(p_w)
+comm = 0
+for _ in range(STEPS // K):
+    p_w, st_w, m = DP.local_sgd_round(loss_fn, p_w, opt, st_w, shards_k)
+    comm += int(m["comm_bytes"])
+p = jax.tree_util.tree_map(lambda t: t[0], p_w)
+rows.append((f"local SGD (K={K})", comm, comm, float(loss_fn(p, full))))
+
+# --- EASGD ---
+cfg = DP.EASGDConfig(lr=0.05, rho=0.5)
+p_w = {"w": 0.1 * jax.random.normal(KEY, (W, DIM))}
+center = {"w": jnp.zeros((DIM,))}
+comm = 0
+for _ in range(STEPS // 2):
+    p_w, center, m = DP.easgd_round(loss_fn, p_w, center, shards_k, cfg)
+    comm += int(m["comm_bytes"])
+rows.append(("EASGD", comm, comm, float(loss_fn(center, full))))
+
+# --- DETSGRAD (event-triggered) ---
+p_w = jax.tree_util.tree_map(
+    lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), params0)
+b_w = p_w
+comm = events = 0
+for i in range(STEPS):
+    p_w, b_w, m = DP.detsgrad_step(loss_fn, p_w, b_w, jnp.int32(i), shards,
+                                   lr=0.05, c0=0.5)
+    comm += int(m["comm_bytes"])
+    events += int(m["comm_events"])
+p = jax.tree_util.tree_map(lambda t: jnp.mean(t, 0), p_w)
+rows.append((f"DETSGRAD ({events}/{STEPS*W} events)", comm, comm,
+             float(loss_fn(p, full))))
+
+print(f"\n{'technique':36s} {'comm bytes':>12s} {'bottleneck':>12s} "
+      f"{'final loss':>11s}")
+for name, comm, bn, loss in rows:
+    print(f"{name:36s} {comm:12,d} {bn:12,d} {loss:11.5f}")
+print("\nsurvey claims visible above: PS bottleneck link > all-reduce; "
+      "compression ~4x fewer bytes;\nlocal SGD / EASGD / DETSGRAD trade "
+      "slight loss for large communication savings.")

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Wraps the production launcher (repro.launch.train) with a purpose-built
+~100M dense config (qwen3 family).  On synthetic bigram data the loss has
+a known floor (the source's conditional entropy), so the run demonstrates
+real convergence, not just motion.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --batch 4 --seq 256
+
+On this CPU container a step takes seconds; the identical script drives
+the production mesh on TPU (see README).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train
+from repro.models.config import ModelConfig, param_count
+from repro.configs import get_config
+import repro.configs as C
+
+
+def make_100m() -> ModelConfig:
+    # vocab sized so a few-hundred-step CPU run actually visits each
+    # bigram several times (32k-entry transition table, ~1k tokens/step)
+    cfg = ModelConfig(
+        name="qwen3-100m", arch_type="dense",
+        num_layers=14, d_model=640, num_heads=10, num_kv_heads=5,
+        d_ff=2560, vocab_size=8192, qk_norm=True, rope=True,
+        activation="swiglu", param_dtype="float32",
+        compute_dtype="float32", remat="none")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_100m()
+    total, _ = param_count(cfg)
+    print(f"training {cfg.name}: {total/1e6:.1f}M params, "
+          f"{args.steps} steps of batch {args.batch} x seq {args.seq}")
+
+    # register the config so the launcher can find it
+    mod = type(sys)("repro.configs._ex100m")
+    mod.CONFIG = cfg
+    mod.SMOKE = cfg
+    sys.modules["repro.configs._ex100m"] = mod
+    C._MODULES["qwen3-100m"] = "_ex100m"
+
+    out = train([
+        "--arch", "qwen3-100m", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--lr", str(args.lr), "--log-every", "10",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+    ])
+    losses = out["losses"]
+    floor = out["entropy_floor"]
+    print(f"\nfinal loss {losses[-1]:.4f}  (entropy floor {floor:.4f}; "
+          f"start {losses[0]:.4f})")
+    print(f"gap to floor closed: "
+          f"{100*(losses[0]-losses[-1])/(losses[0]-floor):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

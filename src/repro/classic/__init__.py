@@ -1,0 +1,2 @@
+"""Distributed traditional ML (survey §Distributed classification /
+clustering): boosting, SVM, k-means, fuzzy c-means + consensus."""

@@ -1,0 +1,73 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Each module defines CONFIG (the exact assigned architecture) and SMOKE (a
+reduced same-family variant for CPU tests: <=4 layers, d_model<=512,
+<=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "nemotron-4-340b": "nemotron4_340b",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "whisper-tiny": "whisper_tiny",
+    "arctic-480b": "arctic_480b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): name -> (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_plan(arch: str, shape: str) -> Optional[ModelConfig]:
+    """Return the config to use for (arch, shape), or None if skipped.
+
+    long_500k needs sub-quadratic state: SSM/hybrid run natively; dense-
+    attention archs run the sliding-window variant (window 4096);
+    whisper-tiny is skipped (enc-dec full attention, 448-token decoder by
+    spec) — recorded in DESIGN.md §Arch-applicability.
+    """
+    cfg = get_config(arch)
+    if shape != "long_500k":
+        return cfg
+    if arch == "whisper-tiny":
+        return None
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return cfg
+    return cfg.with_(attention_kind="sliding_window", sliding_window=4096,
+                     name=cfg.name + "-swa")

@@ -1,0 +1,229 @@
+"""Data parallelism with the survey's aggregation / communication variants.
+
+The worker dimension is explicit (leading axis W on per-worker state), so the
+same code runs single-device (vmap semantics; unit tests), on a CPU host mesh
+via shard_map (integration tests map W to the "data" mesh axis and the
+jnp.mean over W becomes a psum — `tests/test_parallelism.py` proves they
+agree), and on the production mesh via pjit (the launcher path).
+
+Implemented survey techniques (§Distributed deep learning / data parallelism):
+  * synchronous S-SGD with All-Reduce aggregation            [refs 73, 92-94]
+  * parameter-server aggregation (gather-to-root + broadcast) [ref 72, 67]
+  * local SGD / bounded staleness (Downpour's async adaptation) [ref 67]
+  * EASGD: elastic averaging against a center variable        [ref 68]
+  * DETSGRAD: event-triggered communication                   [ref 69]
+  * natural compression of gradient traffic                   [ref 75]
+  * DBS: dynamic batch sizing by worker throughput            [ref 71]
+
+Each step function returns (new_state..., metrics) where metrics include
+`comm_bytes` and `comm_events` so benchmarks can reproduce the papers'
+communication-saving claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import natural_compress, wire_bytes
+
+Pytree = Any
+
+
+def _tmap(f, *ts):
+    return jax.tree_util.tree_map(f, *ts)
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+
+
+def per_worker_grads(loss_fn: Callable, params: Pytree, batches: Pytree):
+    """batches have leading worker axis W; params are shared (replicated)."""
+    def one(batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+    return jax.vmap(one)(batches)  # losses (W,), grads with leading W
+
+
+# ---------------------------------------------------------------------------
+# Aggregation modes (survey: parameter server vs All-Reduce)
+# ---------------------------------------------------------------------------
+def aggregate(grads_w: Pytree, mode: str = "allreduce",
+              compress_key: Optional[jax.Array] = None
+              ) -> Tuple[Pytree, Dict[str, Any]]:
+    """grads_w: gradients with leading worker axis W.
+
+    "allreduce": every worker ends with the mean (ring/torus collective —
+      wire bytes per worker ≈ 2·P·(W-1)/W for reduce-scatter+all-gather).
+    "ps": workers send to a root which averages and broadcasts (root link
+      carries W·P in + W·P out — the PS bottleneck the survey describes).
+    With `compress_key`, worker->aggregator traffic is natural-compressed
+    (unbiased; bidirectional compression is benchmarked separately).
+    """
+    W = jax.tree_util.tree_leaves(grads_w)[0].shape[0]
+    sent = grads_w
+    if compress_key is not None:
+        leaves, treedef = jax.tree_util.tree_flatten(grads_w)
+        keys = jax.random.split(compress_key, len(leaves))
+        leaves = [natural_compress(l, k) for l, k in zip(leaves, keys)]
+        sent = jax.tree_util.tree_unflatten(treedef, leaves)
+    mean = _tmap(lambda g: jnp.mean(g.astype(jnp.float32), 0), sent)
+
+    n_elems = sum(l.size // W for l in jax.tree_util.tree_leaves(grads_w))
+    elem_bytes = 1 if compress_key is not None else 4
+    if mode == "allreduce":
+        per_worker = 2 * n_elems * (W - 1) // W * elem_bytes
+        comm = {"comm_bytes": per_worker * W, "bottleneck_link_bytes": per_worker}
+    elif mode == "ps":
+        comm = {"comm_bytes": 2 * W * n_elems * elem_bytes,
+                "bottleneck_link_bytes": 2 * W * n_elems * elem_bytes}
+    else:
+        raise ValueError(mode)
+    comm["comm_events"] = W
+    return mean, comm
+
+
+def sync_step(loss_fn, params, opt, opt_state, batches_w, *,
+              mode="allreduce", compress_key=None):
+    """Synchronous S-SGD: one data-parallel step (survey Fig. 2)."""
+    losses, grads_w = per_worker_grads(loss_fn, params, batches_w)
+    g, comm = aggregate(grads_w, mode, compress_key)
+    new_params, new_state = opt.update(g, opt_state, params)
+    metrics = {"loss": jnp.mean(losses), **comm}
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Local SGD (bounded-staleness adaptation of Downpour's async updates)
+# ---------------------------------------------------------------------------
+def local_sgd_round(loss_fn, params_w, opt, opt_states_w, batches_wk, *,
+                    sync: bool = True):
+    """K local steps per worker, then (optionally) average.
+
+    params_w: worker-stacked params (W, ...); batches_wk: (W, K, ...).
+    XLA's single-controller model is bulk-synchronous, so Downpour's
+    asynchrony is reproduced as bounded staleness K (see DESIGN.md §7).
+    """
+    K = jax.tree_util.tree_leaves(batches_wk)[0].shape[1]
+
+    def worker(params, opt_state, batches_k):
+        def step(carry, batch):
+            p, s = carry
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            p, s = opt.update(g, s, p)
+            return (p, s), loss
+        (p, s), losses = jax.lax.scan(step, (params, opt_state), batches_k)
+        return p, s, losses
+
+    params_w, opt_states_w, losses = jax.vmap(worker)(
+        params_w, opt_states_w, batches_wk)
+    comm_bytes = 0
+    if sync:
+        mean = _tmap(lambda p: jnp.mean(p.astype(jnp.float32), 0), params_w)
+        W = jax.tree_util.tree_leaves(params_w)[0].shape[0]
+        params_w = _tmap(
+            lambda m, p: jnp.broadcast_to(m.astype(p.dtype)[None], p.shape),
+            mean, params_w)
+        comm_bytes = 2 * tree_bytes(mean) * (W - 1)
+    return params_w, opt_states_w, {"loss": jnp.mean(losses),
+                                    "comm_bytes": comm_bytes}
+
+
+# ---------------------------------------------------------------------------
+# EASGD (ref 68): elastic force against a center variable
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EASGDConfig:
+    lr: float = 0.05
+    rho: float = 0.1     # elastic coefficient (alpha = lr * rho)
+    comm_every: int = 1  # tau: local steps between elastic updates
+
+
+def easgd_round(loss_fn, params_w, center, batches_wk, cfg: EASGDConfig):
+    """One communication round: tau local SGD steps then the elastic update.
+
+      x_i <- x_i - lr*grad - alpha*(x_i - x~)
+      x~  <- x~ + beta/W * sum_i (x_i - x~)       (beta = alpha * W)
+    """
+    alpha = cfg.lr * cfg.rho
+
+    def worker(params, batches_k):
+        def step(p, batch):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            p = _tmap(lambda x, gg: x - cfg.lr * gg, p, g)
+            return p, loss
+        return jax.lax.scan(step, params, batches_k)
+
+    params_w, losses = jax.vmap(worker)(params_w, batches_wk)
+    # elastic move toward/of the center
+    diff = _tmap(lambda p, c: p - c[None], params_w, center)
+    params_w = _tmap(lambda p, d: p - alpha * d, params_w, diff)
+    center = _tmap(lambda c, d: c + alpha * jnp.sum(d, 0), center, diff)
+    comm = 2 * tree_bytes(center) * jax.tree_util.tree_leaves(params_w)[0].shape[0]
+    return params_w, center, {"loss": jnp.mean(losses), "comm_bytes": comm}
+
+
+# ---------------------------------------------------------------------------
+# DETSGRAD (ref 69): event-triggered parameter broadcast
+# ---------------------------------------------------------------------------
+def detsgrad_step(loss_fn, params_w, bcast_w, step, batches_w, *,
+                  lr: float = 0.05, c0: float = 1.0, decay: float = 0.505):
+    """Each worker broadcasts its params only when the drift since its last
+    broadcast exceeds the (decaying) threshold; consensus uses the latest
+    broadcast copies.  Returns per-step comm events (the paper's metric).
+
+      trigger_i:  ||x_i - x^_i||_1 >= c0 / (step+1)^decay
+    """
+    def consensus(bc):
+        return _tmap(lambda b: jnp.mean(b, 0), bc)
+
+    mean_bc = consensus(bcast_w)
+
+    def worker(p, bhat, batch):
+        # consensus step pulls toward the mean of broadcast copies
+        p = _tmap(lambda x, m: 0.5 * x + 0.5 * m, p, mean_bc)
+        loss, g = jax.value_and_grad(loss_fn)(p, batch)
+        p = _tmap(lambda x, gg: x - lr * gg, p, g)
+        drift = sum(jnp.sum(jnp.abs(x - h))
+                    for x, h in zip(jax.tree_util.tree_leaves(p),
+                                    jax.tree_util.tree_leaves(bhat)))
+        thresh = c0 / jnp.power(step.astype(jnp.float32) + 1.0, decay)
+        fire = drift >= thresh
+        new_bhat = jax.tree_util.tree_map(
+            lambda x, h: jnp.where(fire, x, h), p, bhat)
+        return p, new_bhat, fire, loss
+
+    params_w, bcast_w, fires, losses = jax.vmap(worker)(
+        params_w, bcast_w, batches_w)
+    n_params = tree_bytes(mean_bc)
+    metrics = {"loss": jnp.mean(losses),
+               "comm_events": jnp.sum(fires),
+               "comm_bytes": jnp.sum(fires) * n_params}
+    return params_w, bcast_w, metrics
+
+
+# ---------------------------------------------------------------------------
+# DBS (ref 71): dynamic batch sizing from per-worker throughput
+# ---------------------------------------------------------------------------
+def dbs_partition(samples_per_sec: jax.Array, global_batch: int,
+                  multiple: int = 1) -> jax.Array:
+    """Split `global_batch` across workers proportional to throughput.
+
+    Returns integer batch sizes summing exactly to global_batch (largest-
+    remainder rounding to `multiple`)."""
+    units = global_batch // multiple
+    rate = samples_per_sec / jnp.sum(samples_per_sec)
+    raw = rate * units
+    base = jnp.floor(raw).astype(jnp.int32)
+    rem = units - jnp.sum(base)
+    frac = raw - base
+    rank = jnp.argsort(jnp.argsort(-frac))  # 0 = largest remainder
+    bump = (rank < rem).astype(jnp.int32)
+    return (base + bump) * multiple
+
+
+def dbs_epoch_time(samples_per_sec: jax.Array, split: jax.Array) -> jax.Array:
+    """Synchronous epoch time = slowest worker (the survey's straggler cost)."""
+    return jnp.max(split / samples_per_sec)

@@ -1,0 +1,181 @@
+"""Roofline analysis from AOT-compiled artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step:
+
+    T_compute    = HLO_FLOPs / peak_FLOP/s          (per chip; partitioned HLO)
+    T_memory     = HLO_bytes / HBM_bw               (per chip)
+    T_collective = collective_bytes / ICI link bw   (per chip)
+
+`cost_analysis()` reports the partitioned (per-device) module, so no further
+division by chip count is needed.  Collective bytes are parsed from the
+optimized HLO text: the summed result sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig, param_count
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] literal in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9_\[\]{},\s/*=-]*?\)?)\s*"
+    r"\b(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Per-device collective bytes from (post-SPMD) optimized HLO text.
+
+    Counts the result-shape bytes of every collective op (simple AND
+    tuple-result forms — an earlier greedy-regex version silently dropped
+    the simple form; tests/test_roofline.py pins both).  `-done` halves of
+    async pairs are skipped (counted at `-start`)."""
+    by_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue
+        by_op[m.group("op")] += _shape_bytes(m.group("type"))
+    return sum(by_op.values()), by_op
+
+
+def model_flops(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> float:
+    """Analytic 'useful' FLOPs: 6·N·D train, 2·N·D inference (N = active
+    non-embedding params + lm head contribution)."""
+    total, active = param_count(cfg)
+    emb = cfg.vocab_size * cfg.d_model * 2
+    n_active = active - emb + cfg.vocab_size * cfg.d_model  # head matmul counts
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+# per-chip link-bytes per RESULT byte on a ring/torus: an all-reduce
+# moves ~2x its result (reduce-scatter + all-gather phases); AG/RS/A2A/CP
+# move ~1x.  (W-1)/W ~ 1 at W=16.
+COLL_WEIGHTS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def weighted_coll_bytes(by_op: Dict[str, int]) -> float:
+    return sum(COLL_WEIGHTS.get(op, 1.0) * b for op, b in by_op.items())
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_op: Dict[str, int]
+    model_flops_total: float
+    peak_memory_bytes: Optional[int] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        if self.coll_by_op and sum(self.coll_by_op.values()) > 0:
+            return weighted_coll_bytes(self.coll_by_op) / ICI_BW
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_total = self.flops_per_chip * self.chips
+        if hlo_total <= 0:
+            return float("nan")
+        return self.model_flops_total / hlo_total
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_ratio=self.useful_ratio,
+                 step_lower_bound=self.step_time_lower_bound)
+        return d
+
+
+def analyze(compiled, arch: str, shape: str, mesh_name: str, chips: int,
+            mflops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    cbytes, by_op = collective_bytes(text)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = int(ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                   ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    flops_per_chip=flops, bytes_per_chip=byts,
+                    coll_bytes_per_chip=cbytes, coll_by_op=by_op,
+                    model_flops_total=mflops, peak_memory_bytes=peak)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticBigramSource, FileTokenSource,
+                                 DataPipeline, make_pipeline)

@@ -1,0 +1,133 @@
+"""Flash attention (blockwise online softmax) as a Pallas TPU kernel.
+
+TPU adaptation of the GPU flash-attention idea (DESIGN.md §7): instead of
+warp-level tiling we tile HBM->VMEM with BlockSpecs sized for the MXU
+(block_q x d_head and block_k x d_head tiles, 128-aligned), and keep the
+running max / normalizer / accumulator in VMEM scratch that persists across
+the innermost (k-block) grid dimension.
+
+GQA is fused: the kv-head index for a q-head is computed in the BlockSpec
+index_map (h // group), so kv tiles are never materialized per-q-head in HBM.
+
+Grid: (B, Hq, num_q_blocks, num_k_blocks), k innermost (sequential).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, dh)
+    v = v_ref[0, 0].astype(jnp.float32)  # (block_k, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        # queries end at global position seq_k-1 (decode: q is the suffix)
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (block_q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        # fully-masked rows (padding) have l == 0; emit 0 instead of nan
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,S,Hq,dh); k,v: (B,T,Hk,dh) with Hq % Hk == 0.
+
+    Returns (B,S,Hq,dh) in q.dtype.  Layout is transposed to
+    (B,H,S,dh) internally so the (S,dh) tile is MXU-shaped.
+    """
+    B, S, Hq, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    assert Hq % Hk == 0, (Hq, Hk)
+    G = Hq // Hk
+    sc = scale if scale is not None else dh ** -0.5
+
+    qt = jnp.swapaxes(q, 1, 2)  # (B,Hq,S,dh)
+    kt = jnp.swapaxes(k, 1, 2)  # (B,Hk,T,dh)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    # pad seq dims to block multiples (masked rows produce 0 and are cropped)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    if Sp != S:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        if not causal:
+            raise ValueError("non-causal flash requires T % block_k == 0 "
+                             "(padding keys would receive weight)")
+
+    grid = (B, Hq, Sp // bq, Tp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=sc, causal=causal, window=window,
+                          block_q=bq, block_k=bk, seq_q=S, seq_k=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running normalizer
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = out[:, :, :S]
+    return jnp.swapaxes(out, 1, 2)

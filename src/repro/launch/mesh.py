@@ -1,0 +1,28 @@
+"""Production meshes (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: 256 chips as (16, 16) ("data", "model"); multi-pod:
+2 pods = 512 chips as (2, 16, 16) ("pod", "data", "model") — the "pod"
+axis crosses DCN, so the launcher maps only low-volume collectives
+(data-parallel gradient reduction or pipeline stages) onto it.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small CPU mesh for integration tests (requires
+    --xla_force_host_platform_device_count >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,98 @@
+"""Serving launcher: batched prefill + decode with a KV/state cache.
+
+Implements the production serve path the decode dry-run shapes lower:
+a batch of requests is prefilled once (builds the cache), then decoded
+token-by-token with `serve_step` (one token against the cache).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import sharding as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as MD
+
+
+def serve(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if jax.default_backend() == "cpu":
+        cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
+    B, S, G = args.batch, args.prompt_len, args.gen
+    cache_len = S + G
+
+    mesh = make_host_mesh(args.data, args.model)
+    with SH.use_mesh(mesh), SH.axis_env(SH.DP_TP_ENV):
+        params = jax.jit(lambda k: MD.init_model(cfg, k))(
+            jax.random.PRNGKey(args.seed))
+        prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                     (B, S), 0, cfg.vocab_size)
+        extra = None
+        if cfg.arch_type == "vlm":
+            extra = jnp.zeros((B, cfg.num_patches, MD.VISION_EMBED_DIM),
+                              jnp.dtype(cfg.compute_dtype))
+        if cfg.arch_type == "audio":
+            extra = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+
+        @jax.jit
+        def prefill(params, tokens):
+            logits, _, cache = MD.forward(params, cfg, tokens,
+                                          extra_embeds=extra,
+                                          return_cache=True,
+                                          cache_len=cache_len)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            return nxt, cache
+
+        @jax.jit
+        def decode(params, tok, pos, cache):
+            logits, cache = MD.decode_step(params, cfg, tok, pos, cache)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            return nxt, cache
+
+        t0 = time.time()
+        tok, cache = prefill(params, prompts)
+        tok.block_until_ready()
+        t_prefill = time.time() - t0
+
+        out = [tok]
+        t0 = time.time()
+        for i in range(G - 1):
+            # VLM caches include the patch prefix before the prompt tokens
+            pos = S + i + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
+            tok, cache = decode(params, tok, jnp.int32(pos), cache)
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    tput = B * (G - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} B={B} prompt={S} gen={G}")
+    print(f"prefill: {t_prefill:.3f}s   decode: {t_decode:.3f}s "
+          f"({tput:.1f} tok/s incl. compile)")
+    print("sample generation (first request):", gen[0, :16].tolist())
+    return {"generated": gen, "t_prefill": t_prefill, "t_decode": t_decode}
+
+
+if __name__ == "__main__":
+    serve()

@@ -1,0 +1,145 @@
+"""Training launcher.
+
+Drives any registered architecture (``--arch``, ``--smoke`` for the
+reduced variant) on the active device set: 1 CPU device for local runs,
+a host mesh for multi-device CPU integration (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE launching),
+or the production TPU mesh.
+
+The survey's parallelism taxonomy is selected by ``--env``:
+  dp       data parallelism only
+  dp_tp    hybrid data x tensor (production default)
+  tp       model/tensor parallelism only
+  fsdp     dp_tp + ZeRO param/optimizer sharding
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 100 --batch 8 --seq 256 --data 1 --model 1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+from repro.configs import get_config
+from repro.core import sharding as SH
+from repro.data import make_pipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import batch_pspecs, batch_abstract, make_train_step
+from repro.models import model as MD
+from repro.optim.optimizers import get_optimizer, warmup_cosine
+
+ENVS = {
+    "dp": SH.DP_ENV,
+    "dp_tp": SH.DP_TP_ENV,
+    "tp": SH.TP_ENV,
+    "fsdp": SH.TRAIN_ENV,
+}
+
+
+def train(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--env", default="dp_tp", choices=list(ENVS))
+    ap.add_argument("--data", type=int, default=1, help="data mesh dim")
+    ap.add_argument("--model", type=int, default=1, help="model mesh dim")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="natural compression on gradients (survey ref 75)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    # keep params fp32 on CPU for small-scale training stability
+    if jax.default_backend() == "cpu":
+        cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
+
+    mesh = make_host_mesh(args.data, args.model)
+    opt = get_optimizer(args.optimizer,
+                        warmup_cosine(args.lr, 20, args.steps))
+
+    with SH.use_mesh(mesh), SH.axis_env(ENVS[args.env]):
+        pspecs = MD.model_pspecs(cfg)
+        params = jax.jit(
+            lambda k: MD.init_model(cfg, k),
+            out_shardings=jax.tree_util.tree_map(
+                lambda p: NamedSharding(mesh, p), pspecs,
+                is_leaf=lambda x: isinstance(x, P)),
+        )(jax.random.PRNGKey(args.seed))
+        opt_state = jax.jit(opt.init)(params)
+
+        step0 = 0
+        if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            abs_tree = {"params": jax.eval_shape(lambda: params),
+                        "opt": jax.eval_shape(lambda: opt_state)}
+            tree, meta = restore_checkpoint(args.ckpt_dir, abs_tree)
+            params, opt_state = tree["params"], tree["opt"]
+            step0 = meta.get("step", 0)
+            print(f"resumed from step {step0}")
+
+        batch_abs = batch_abstract(cfg, args.batch, args.seq)
+        bspecs = batch_pspecs(cfg, batch_abs)
+        bshard = jax.tree_util.tree_map(
+            lambda p: NamedSharding(mesh, p), bspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        step_fn = jax.jit(
+            make_train_step(cfg, opt, compress_grads=args.compress_grads),
+            donate_argnums=(0, 1))
+
+        pipe = make_pipeline(cfg.vocab_size, args.batch, args.seq,
+                             seed=args.seed)
+        entropy_floor = pipe.source.entropy_nats
+
+        losses = []
+        t0 = time.time()
+        for i, batch in enumerate(pipe.batches(args.steps)):
+            step = step0 + i
+            dev_batch = {k: jax.device_put(v, bshard[k])
+                         for k, v in batch.items()}
+            if cfg.arch_type in ("vlm", "audio"):
+                ee = batch_abs["extra_embeds"]
+                dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
+            extra = ((jax.random.PRNGKey(args.seed + 1 + step),)
+                     if args.compress_grads else ())
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 dev_batch, *extra)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"(floor~{entropy_floor:.3f}) "
+                      f"gnorm {float(metrics['gnorm']):.3f} "
+                      f"{dt / max(i, 1):.2f}s/step", flush=True)
+            if (args.ckpt_dir and args.ckpt_every
+                    and (step + 1) % args.ckpt_every == 0):
+                save_checkpoint(args.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state},
+                                {"step": step + 1, "arch": args.arch})
+
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, step0 + args.steps,
+                            {"params": params, "opt": opt_state},
+                            {"step": step0 + args.steps, "arch": args.arch})
+
+    return {"losses": losses, "entropy_floor": entropy_floor,
+            "params": params}
+
+
+if __name__ == "__main__":
+    train()

@@ -1,0 +1,220 @@
+"""Grouped-query attention: batched (train/prefill) and one-token decode.
+
+Projections are stored flattened (d_model, heads*head_dim) so the tensor-
+parallel dim (heads*head_dim) is always divisible by the model axis (head_dim
+is a multiple of the 128-lane register width on every assigned arch).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import shard
+from repro.models.common import ParamDesc, apply_rope, dense, head_rms_norm
+from repro.models.config import ModelConfig
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_descs(cfg: ModelConfig, dtype: Optional[str] = None) -> Dict[str, ParamDesc]:
+    dt = dtype or cfg.param_dtype
+    d = cfg.d_model
+    descs = {
+        "wq": ParamDesc((d, cfg.q_dim), (None, "model"), dt, fan_in=d),
+        "wk": ParamDesc((d, cfg.kv_dim), (None, "model"), dt, fan_in=d),
+        "wv": ParamDesc((d, cfg.kv_dim), (None, "model"), dt, fan_in=d),
+        "wo": ParamDesc((cfg.q_dim, d), ("model", None), dt, fan_in=cfg.q_dim),
+    }
+    if cfg.qk_norm:
+        descs["q_scale"] = ParamDesc((cfg.head_dim,), (None,), dt, init="ones")
+        descs["k_scale"] = ParamDesc((cfg.head_dim,), (None,), dt, init="ones")
+    return descs
+
+
+def _project_qkv(p, x, positions, cfg: ModelConfig):
+    B, S, _ = x.shape
+    q = dense(x, p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = dense(x, p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(x, p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_scale"], cfg.norm_eps)
+    if cfg.rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,S,Hq,dh), k: (B,T,Hk,dh) -> scores (B,Hk,G,S,T) in fp32."""
+    B, S, Hq, dh = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, S, Hk, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    return scores * (dh ** -0.5)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Hk,G,S,T) fp32; v: (B,T,Hk,dh) -> (B,S,Hq,dh)."""
+    B, Hk, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, Hk * G, -1)
+
+
+def causal_mask(S: int, T: int, offset: int = 0,
+                window: Optional[int] = None) -> jax.Array:
+    """(S,T) bool mask; query i (global pos offset+i) attends key j<=pos.
+
+    With `window`, only the last `window` positions are visible
+    (sliding-window attention)."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention(p, x, positions, cfg: ModelConfig, *,
+              encoder_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              causal: bool = True) -> jax.Array:
+    """Batched attention. x: (B,S,d). encoder_kv -> cross-attention."""
+    B, S, _ = x.shape
+    if encoder_kv is not None:
+        q = dense(x, p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = head_rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k, v = encoder_kv
+        is_causal = False
+    else:
+        q, k, v = _project_qkv(p, x, positions, cfg)
+        is_causal = causal
+    window = (cfg.sliding_window
+              if cfg.attention_kind == "sliding_window" else None)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    out = gqa_attend(q, k, v, cfg, causal=is_causal, window=window)
+    out = shard(out, "batch", None, "model", None)
+    y = dense(out.reshape(B, S, -1), p["wo"])
+    return shard(y, "batch", "seq", None)
+
+
+def gqa_attend(q, k, v, cfg: ModelConfig, *, causal: bool = True,
+               window: Optional[int] = None) -> jax.Array:
+    """Backend dispatch for batched GQA attention: the Pallas flash
+    kernel (cfg.use_flash_kernel), the q-chunked lax.map path
+    (cfg.attn_q_chunk), or the flat softmax."""
+    S = q.shape[1]
+    if cfg.use_flash_kernel and S > 1:
+        from repro.kernels import ops as K
+        return K.flash_attention(q, k, v, causal=causal, window=window)
+    if cfg.attn_q_chunk and S > cfg.attn_q_chunk:
+        return _gqa_chunked(q, k, v, cfg, causal=causal, window=window)
+    scores = _gqa_scores(q, k, cfg)
+    if causal:
+        T = k.shape[1]
+        m = causal_mask(S, T, T - S, window)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v)
+
+
+def _gqa_chunked(q, k, v, cfg: ModelConfig, *, causal: bool,
+                 window: Optional[int]) -> jax.Array:
+    """Flash-style q-chunked attention: scores materialize only per
+    (chunk x T) block inside a lax.map — bounds the activation working set
+    for long-context prefill (EXPERIMENTS.md §Perf iteration 3)."""
+    B, S, Hq, dh = q.shape
+    Qc = min(cfg.attn_q_chunk, S)
+    nq = -(-S // Qc)
+    Sp = nq * Qc
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qs = jnp.moveaxis(q.reshape(B, nq, Qc, Hq, dh), 1, 0)
+
+    def blk(args):
+        i, qb = args  # qb: (B, Qc, Hq, dh)
+        scores = _gqa_scores(qb, k, cfg)  # (B,Hk,G,Qc,T)
+        if causal:
+            qpos = i * Qc + jnp.arange(Qc)[:, None]
+            kpos = jnp.arange(k.shape[1])[None, :]
+            m = kpos <= qpos
+            if window is not None:
+                m &= kpos > qpos - window
+            scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return _gqa_out(probs, v)
+
+    outs = jax.lax.map(blk, (jnp.arange(nq), qs))  # (nq,B,Qc,Hq,dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sp, Hq, dh)
+    return out[:, :S]
+
+
+def encoder_kv(p, enc_x, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (cached at prefill)."""
+    B, T, _ = enc_x.shape
+    k = dense(enc_x, p["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(enc_x, p["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = head_rms_norm(k, p["k_scale"], cfg.norm_eps)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Decode (one new token against a KV cache)
+# --------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, layers: int,
+                  dtype=jnp.bfloat16):
+    shape = (layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, cache_len: int, layers: int,
+                   dtype=jnp.bfloat16):
+    shape = (layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     *, encoder_kv_cache=None):
+    """x: (B,1,d); cache_k/v: (B,C,Hk,dh); pos: () int32 current length.
+
+    Returns (y, new_cache_k, new_cache_v).  With a sliding window the cache
+    is a ring buffer of size C=window; otherwise C >= pos+1.
+    """
+    B, _, _ = x.shape
+    C = cache_k.shape[1]
+    ring = cfg.attention_kind == "sliding_window"
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if encoder_kv_cache is not None:
+        q = dense(x, p["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = head_rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k, v = encoder_kv_cache
+        valid = jnp.ones((k.shape[1],), bool)
+        cache_k, cache_v = cache_k, cache_v  # untouched
+        new_k, new_v = cache_k, cache_v
+    else:
+        q, k1, v1 = _project_qkv(p, x, positions, cfg)
+        slot = jnp.mod(pos, C) if ring else pos
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1, slot, axis=1)
+        k, v = new_k, new_v
+        idx = jnp.arange(C)
+        if ring:
+            valid = (idx <= jnp.mod(pos, C)) | (pos >= C)
+        else:
+            valid = idx <= pos
+    q = shard(q, "batch", None, "model", None)
+    scores = _gqa_scores(q, k, cfg)  # (B,Hk,G,1,C)
+    scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v)
+    y = dense(out.reshape(B, 1, -1), p["wo"])
+    return shard(y, "batch", None, None), new_k, new_v

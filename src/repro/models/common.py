@@ -1,0 +1,153 @@
+"""Shared building blocks: param descriptors, norms, RoPE, activations.
+
+The descriptor tree is the single source of truth for parameter shapes,
+shardings and initializers.  From one tree we derive:
+  * materialized params        (``init_params``)
+  * jax.ShapeDtypeStruct tree  (``abstract_params``)  -- used by the dry-run
+  * PartitionSpec tree         (``param_pspecs``)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import resolve_param_spec
+
+
+# --------------------------------------------------------------------------
+# Parameter descriptors
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: Tuple[int, ...]
+    # logical axis name per dim: None | "model" | "batch" (resolved via the
+    # active AxisEnv at lowering time)
+    spec: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    fan_in: Optional[int] = None  # for 'normal': scale = 1/sqrt(fan_in)
+
+
+jax.tree_util.register_pytree_node(
+    ParamDesc,
+    lambda d: ((), (d.shape, d.spec, d.dtype, d.init, d.fan_in)),
+    lambda aux, _: ParamDesc(*aux),
+)
+
+
+def _is_desc(x):
+    return isinstance(x, ParamDesc)
+
+
+def _materialize(desc: ParamDesc, key) -> jax.Array:
+    dtype = jnp.dtype(desc.dtype)
+    if desc.init == "zeros":
+        return jnp.zeros(desc.shape, dtype)
+    if desc.init == "ones":
+        return jnp.ones(desc.shape, dtype)
+    fan_in = desc.fan_in
+    if fan_in is None:
+        fan_in = desc.shape[-2] if len(desc.shape) >= 2 else desc.shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    if desc.init == "small_normal":
+        scale = 0.02
+    return (jax.random.normal(key, desc.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(tree, key):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_desc)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(tree):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), tree,
+        is_leaf=_is_desc)
+
+
+def param_pspecs(tree):
+    """Resolve logical specs to PartitionSpecs under the active AxisEnv."""
+    return jax.tree_util.tree_map(
+        lambda d: resolve_param_spec(d.shape, d.spec), tree, is_leaf=_is_desc)
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        int(jnp.dtype(d.dtype).itemsize) * math.prod(d.shape)
+        for d in jax.tree_util.tree_leaves(tree, is_leaf=_is_desc))
+
+
+def param_total(tree) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree_util.tree_leaves(tree, is_leaf=_is_desc))
+
+
+# --------------------------------------------------------------------------
+# Numerics helpers
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, scale, eps=1e-6):
+    """qk-norm: normalize over the head dim. x: (..., heads, head_dim)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def activation_fn(kind: str):
+    if kind == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if kind == "gelu":
+        return jax.nn.gelu
+    if kind == "swiglu":  # handled by caller (two projections)
+        return jax.nn.silu
+    raise ValueError(kind)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, d/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense(x, w):
+    """Generalized contraction: x (..., d) @ w (d, *out) -> (..., *out)."""
+    out_shape = x.shape[:-1] + w.shape[1:]
+    w2 = w.reshape(w.shape[0], -1)
+    y = jnp.dot(x.astype(x.dtype), w2.astype(x.dtype),
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype).reshape(out_shape)
+
+
+def dense_in(x, w):
+    """Contraction over trailing input dims: x (..., *in) @ w (*in, d_out)."""
+    n_in = w.ndim - 1
+    xin = x.reshape(x.shape[: x.ndim - n_in] + (-1,))
+    w2 = w.reshape(-1, w.shape[-1])
+    y = jnp.dot(xin.astype(x.dtype), w2.astype(x.dtype),
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

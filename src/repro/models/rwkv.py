@@ -1,0 +1,159 @@
+"""RWKV6 (Finch) block: data-dependent per-channel decay linear attention.
+
+Training/prefill uses an exact `lax.scan` over time for the WKV state (the
+per-channel data-dependent decay makes the chunked split-exponential form
+numerically unsafe in bf16; the Pallas kernel `kernels/wkv6.py` implements
+the TPU-native blocked recurrence).  Decode is the O(1) recurrent update.
+
+State per layer: wkv (B,H,K,V) fp32 + token-shift caches (B,d) x2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import shard
+from repro.models.common import ParamDesc, dense, rms_norm
+from repro.models.config import ModelConfig
+
+
+def rwkv_descs(cfg: ModelConfig, dtype: Optional[str] = None) -> Dict[str, ParamDesc]:
+    dt = dtype or cfg.param_dtype
+    d, ff, r = cfg.d_model, cfg.d_ff, cfg.rwkv_decay_lora
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        # time-mix coefficients (token shift interpolation) for r,k,v,w,g
+        "mix": ParamDesc((5, d), (None, None), dt, init="small_normal"),
+        "wr": ParamDesc((d, d), (None, "model"), dt, fan_in=d),
+        "wk": ParamDesc((d, d), (None, "model"), dt, fan_in=d),
+        "wv": ParamDesc((d, d), (None, "model"), dt, fan_in=d),
+        "wg": ParamDesc((d, d), (None, "model"), dt, fan_in=d),
+        "wo": ParamDesc((d, d), ("model", None), dt, fan_in=d),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x@A)@B))
+        "w0": ParamDesc((d,), (None,), "float32", init="zeros"),
+        "wA": ParamDesc((d, r), (None, None), dt, fan_in=d),
+        "wB": ParamDesc((r, d), (None, None), dt, init="small_normal"),
+        "u": ParamDesc((H, K), (None, None), "float32", init="small_normal"),
+        "ln_x": ParamDesc((d,), (None,), dt, init="ones"),
+        # channel mix
+        "mix_cm": ParamDesc((2, d), (None, None), dt, init="small_normal"),
+        "ck": ParamDesc((d, ff), (None, "model"), dt, fan_in=d),
+        "cv": ParamDesc((ff, d), ("model", None), dt, fan_in=ff),
+        "ln1": ParamDesc((d,), (None,), dt, init="ones"),
+        "ln2": ParamDesc((d,), (None,), dt, init="ones"),
+    }
+
+
+def _token_shift(x, prev):
+    """shifted[t] = x[t-1]; shifted[0] = prev (or 0). x: (B,S,d), prev: (B,d)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u):
+    """Exact WKV6 recurrence.
+
+    r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K).
+      y_t = r_t · (S_{t-1} + u ⊙ k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns y: (B,S,H,V), final state (B,H,K,V) fp32."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., None] * vt[..., None, :]  # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, ..., None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t.astype(f32), 1, 0) for t in (r, k, v, w))
+    init = jnp.zeros((B, H, K, V), f32)
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def wkv_step(state, r, k, v, w, u):
+    """One-token recurrent update. r,k,v,w: (B,H,K)|(B,H,V)."""
+    kv = k[..., None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, ..., None] * kv)
+    state = state * w[..., None] + kv
+    return y, state
+
+
+def rwkv_block(p, x, cfg: ModelConfig, state=None):
+    """x: (B,S,d).  state: None (train/prefill) or dict (decode, S==1).
+
+    Returns (y, new_state) with new_state =
+      {"wkv": (B,H,K,V) f32, "tm": (B,d), "cm": (B,d)}."""
+    B, S, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev_tm = state["tm"] if state is not None else None
+    prev_cm = state["cm"] if state is not None else None
+    wkv_state = state["wkv"] if state is not None else None
+
+    # ---- time mix ----
+    xa = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x_in_last = xa[:, -1]  # token-shift cache for the next segment
+    xs = _token_shift(xa, prev_tm)
+    mix = p["mix"].astype(x.dtype)  # (5,d)
+    def mixed(i):
+        return xa + (xs - xa) * mix[i][None, None]
+    r = dense(mixed(0), p["wr"]).reshape(B, S, H, K)
+    k = dense(mixed(1), p["wk"]).reshape(B, S, H, K)
+    v = dense(mixed(2), p["wv"]).reshape(B, S, H, K)
+    wx = mixed(3)
+    g = jax.nn.silu(dense(mixed(4), p["wg"]))
+    logw = -jnp.exp(jnp.clip(
+        p["w0"][None, None].astype(jnp.float32)
+        + jnp.tanh(dense(wx, p["wA"]).astype(jnp.float32)) @ p["wB"].astype(jnp.float32),
+        -8.0, 8.0))
+    w = jnp.exp(logw).reshape(B, S, H, K)  # in (0,1)
+
+    r_, k_, v_, w_ = (shard(t, "batch", None, "model", None) for t in (r, k, v, w))
+    if state is None or S > 1:
+        y, wkv_new = wkv_scan(r_, k_, v_, w_, p["u"])
+        if state is not None:  # continue from provided state
+            raise NotImplementedError("chunked continuation not needed")
+    else:
+        yv, wkv_new = wkv_step(
+            wkv_state, r_[:, 0].astype(jnp.float32), k_[:, 0].astype(jnp.float32),
+            v_[:, 0].astype(jnp.float32), w_[:, 0].astype(jnp.float32), p["u"])
+        y = yv[:, None]
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    att_out = dense(y, p["wo"])
+    x = x + shard(att_out, "batch", None, None)
+
+    # ---- channel mix ----
+    xc = rms_norm(x, p["ln2"], cfg.norm_eps)
+    xs2 = _token_shift(xc, prev_cm)
+    mix_cm = p["mix_cm"].astype(x.dtype)
+    xk = xc + (xs2 - xc) * mix_cm[0][None, None]
+    h = jnp.square(jax.nn.relu(dense(xk, p["ck"])))
+    h = shard(h, "batch", None, "model")
+    cm_out = dense(h, p["cv"])
+    y_final = x + shard(cm_out, "batch", None, None)
+
+    new_state = {"wkv": wkv_new, "tm": x_in_last, "cm": xc[:, -1]}
+    return y_final, new_state
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int, layers: int):
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    d = cfg.d_model
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "wkv": jax.ShapeDtypeStruct((layers, batch, H, K, K), jnp.float32),
+        "tm": jax.ShapeDtypeStruct((layers, batch, d), cdt),
+        "cm": jax.ShapeDtypeStruct((layers, batch, d), cdt),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, layers: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        rwkv_state_specs(cfg, batch, layers))

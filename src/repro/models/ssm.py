@@ -1,0 +1,180 @@
+"""Mamba2 (State-Space Duality) block, chunked matmul form — TPU adaptation.
+
+The GPU reference implementation is a fused Triton scan; on TPU we use the
+SSD block-decomposition (Dao & Gu 2024): within-chunk quadratic term +
+across-chunk scanned state, all matmuls → MXU friendly.  All decay factors
+are computed as exp(pairwise differences of cumulative logs), which is
+bounded in (0,1] for the masked region — numerically stable.
+
+Decode is the O(1) recurrent form with a conv ring state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import shard
+from repro.models.common import ParamDesc, dense, rms_norm
+from repro.models.config import ModelConfig
+
+
+def ssm_descs(cfg: ModelConfig, dtype: Optional[str] = None) -> Dict[str, ParamDesc]:
+    dt = dtype or cfg.param_dtype
+    d, din, n, h, w = (cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_conv_width)
+    return {
+        "wz": ParamDesc((d, din), (None, "model"), dt, fan_in=d),
+        "wx": ParamDesc((d, din), (None, "model"), dt, fan_in=d),
+        "wB": ParamDesc((d, n), (None, None), dt, fan_in=d),
+        "wC": ParamDesc((d, n), (None, None), dt, fan_in=d),
+        "wdt": ParamDesc((d, h), (None, "model"), dt, fan_in=d),
+        "conv_x": ParamDesc((w, din), (None, "model"), dt, init="small_normal"),
+        "conv_B": ParamDesc((w, n), (None, None), dt, init="small_normal"),
+        "conv_C": ParamDesc((w, n), (None, None), dt, init="small_normal"),
+        "A_log": ParamDesc((h,), (None,), "float32", init="zeros"),
+        "D": ParamDesc((h,), (None,), "float32", init="ones"),
+        "dt_bias": ParamDesc((h,), (None,), "float32", init="zeros"),
+        "norm": ParamDesc((din,), (None,), dt, init="ones"),
+        "wo": ParamDesc((din, d), ("model", None), dt, fan_in=din),
+    }
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). cache: (B,W-1,C)|None."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_cache = xp[:, -(W - 1):]
+    return jax.nn.silu(out), new_cache
+
+
+def _ssd_scan_chunks(states, decays):
+    """states: (B,nc,H,N,P) per-chunk raw states; decays: (B,nc,H) chunk decay.
+
+    Returns prev-state for each chunk: S_prev[c] = sum_{j<c} states[j] *
+    prod_{j<i<=c-1?}... standard scan: carry = carry*decay[c] + states[c]."""
+    def body(carry, inp):
+        s_c, d_c = inp
+        prev = carry
+        carry = carry * d_c[..., None, None] + s_c
+        return carry, prev
+    B = states.shape[0]
+    init = jnp.zeros_like(states[:, 0])
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decays, 1, 0))
+    final, prevs = jax.lax.scan(body, init, xs)
+    return jnp.moveaxis(prevs, 0, 1), final  # (B,nc,H,N,P), (B,H,N,P)
+
+
+def ssd_chunked(x, dt, A_log, b, c, D, chunk: int):
+    """SSD core. x: (B,S,H,P); dt: (B,S,H) (post-softplus); b,c: (B,S,N).
+
+    Returns y: (B,S,H,P) and final state (B,H,N,P)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0, "seq must be a multiple of chunk"
+    loga = (-dt * jnp.exp(A_log)[None, None]).astype(jnp.float32)  # (B,S,H)
+    xe = (x * dt[..., None]).astype(x.dtype)  # dt-scaled input
+
+    def r(t, tail):  # reshape to chunks
+        return t.reshape((B, nc, Q) + tail)
+    xc, lc = r(xe, (H, P)), r(loga, (H,))
+    bc, cc = r(b, (N,)), r(c, (N,))
+
+    L = jnp.cumsum(lc, axis=2)  # (B,nc,Q,H) cumulative log decay
+    # within-chunk: att[s,t] = exp(L_s - L_t) for t<=s
+    diff = L[:, :, :, None] - L[:, :, None]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bcqkh,bcqk,bckhp->bcqhp",
+                         att, scores, xc.astype(jnp.float32))
+
+    # per-chunk state: sum_t exp(L_end - L_t) * b_t x_t^T
+    dec_end = jnp.exp(L[:, :, -1:] - L)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        bc.astype(jnp.float32), dec_end, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(L[:, :, -1])  # (B,nc,H)
+    prev, final = _ssd_scan_chunks(states, jnp.moveaxis(chunk_decay, -1, -1))
+
+    # inter-chunk: y_t += exp(L_t) * c_t · S_prev
+    dec_in = jnp.exp(L)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         cc.astype(jnp.float32), dec_in, prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + (D[None, None, :, None] * x.astype(jnp.float32))
+    return y.astype(x.dtype), final
+
+
+def ssm_block(p, x, cfg: ModelConfig, state=None, conv_cache=None):
+    """Mamba2 block.  x: (B,S,d).
+
+    Train/prefill: state/conv_cache None -> chunked SSD, returns
+    (y, (ssm_state, conv_cache)).
+    Decode (S==1 with state given): recurrent update."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = dense(x, p["wz"])
+    xr = dense(x, p["wx"])
+    braw = dense(x, p["wB"])
+    craw = dense(x, p["wC"])
+    dt = jax.nn.softplus(
+        dense(x, p["wdt"]).astype(jnp.float32) + p["dt_bias"][None, None])
+
+    decode = state is not None and S == 1
+    if decode:
+        cx, cb, ccs = (conv_cache["x"], conv_cache["B"], conv_cache["C"])
+        xc, ncx = _causal_conv(xr, p["conv_x"], cx)
+        bc, ncb = _causal_conv(braw, p["conv_B"], cb)
+        cc, ncc = _causal_conv(craw, p["conv_C"], ccs)
+        xh = xc.reshape(B, H, P)
+        a = jnp.exp(-dt[:, 0] * jnp.exp(p["A_log"])[None])  # (B,H)
+        xe = xh.astype(jnp.float32) * dt[:, 0, :, None]
+        new_state = state * a[..., None, None] + jnp.einsum(
+            "bn,bhp->bhnp", bc[:, 0].astype(jnp.float32), xe)
+        y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), new_state)
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, H * P).astype(x.dtype)
+        new_conv = {"x": ncx, "B": ncb, "C": ncc}
+    else:
+        xc, ncx = _causal_conv(xr, p["conv_x"])
+        bc, ncb = _causal_conv(braw, p["conv_B"])
+        cc, ncc = _causal_conv(craw, p["conv_C"])
+        xh = xc.reshape(B, S, H, P)
+        xh = shard(xh, "batch", None, "model", None)
+        y, new_state = ssd_chunked(xh, dt, p["A_log"], bc, cc, p["D"],
+                                   cfg.ssm_chunk)
+        y = y.reshape(B, S, H * P)
+        new_conv = {"x": ncx, "B": ncb, "C": ncc}
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = dense(y, p["wo"])
+    return shard(out, "batch", "seq", None), (new_state, new_conv)
+
+
+def ssm_state_specs(cfg: ModelConfig, batch: int, layers: int):
+    H, P, N, W = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv_width
+    f32 = jnp.float32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "state": jax.ShapeDtypeStruct((layers, batch, H, N, P), f32),
+        "conv": {
+            "x": jax.ShapeDtypeStruct((layers, batch, W - 1, cfg.ssm_d_inner), cdt),
+            "B": jax.ShapeDtypeStruct((layers, batch, W - 1, N), cdt),
+            "C": jax.ShapeDtypeStruct((layers, batch, W - 1, N), cdt),
+        },
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), ssm_state_specs(cfg, batch, layers))

@@ -1,0 +1,176 @@
+"""Optimizers (pure-JAX, optax-style pytrees) with sharded states.
+
+Optimizer state mirrors the parameter tree, so the same PartitionSpecs apply
+(moments shard exactly like their parameter).  Adafactor keeps factored
+second moments for the large 2D weights — the memory-bound configs
+(nemotron-4-340b) need it to fit the optimizer on 256 chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # state_specs(param_specs) -> state pytree of PartitionSpecs
+    state_specs: Callable[[Any], Any]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), gnorm
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+def sgd_momentum(lr: Callable, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused=None):
+        step = state["step"]
+        mu = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                   state["mu"], grads)
+        lr_t = lr(step)
+        new_p = _tmap(lambda p, m: (p.astype(jnp.float32) - lr_t * m)
+                      .astype(p.dtype), params, mu)
+        return new_p, {"mu": mu, "step": step + 1}
+
+    def state_specs(pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {"mu": pspecs, "step": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"mu": _tmap(z, params), "nu": _tmap(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state["mu"], grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) *
+                   jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        lr_t = lr(step - 1)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        return _tmap(upd, params, mu, nu), {"mu": mu, "nu": nu, "step": step}
+
+    def state_specs(pspecs):
+        from jax.sharding import PartitionSpec as P
+        return {"mu": pspecs, "nu": pspecs, "step": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr: Callable, eps: float = 1e-30,
+              decay: float = 0.8) -> Optimizer:
+    """Factored second moments for >=2D params (row/col statistics)."""
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"f": _tmap(mk, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step - 1)
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    r[..., None] * c[..., None, :] /
+                    jnp.clip(jnp.mean(r, axis=-1, keepdims=True)[..., None],
+                             eps))
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                nf = {"v": v}
+            upd_ = g / jnp.clip(denom, 1e-12)
+            # update clipping (Adafactor's RMS rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype), nf
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_f = treedef.flatten_up_to(state["f"])
+        out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_f = treedef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_f, "step": step}
+
+    def state_specs(pspecs):
+        from jax.sharding import PartitionSpec as P
+
+        def mk(spec):
+            # row stats drop the last dim's sharding; col stats the 2nd-last
+            parts = tuple(spec)
+            if len(parts) >= 2:
+                return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": P(*parts)}
+        return {"f": jax.tree_util.tree_map(
+            mk, pspecs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec)), "step": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, lr_fn) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "sgd":
+        return sgd_momentum(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(name)

@@ -1,0 +1,5 @@
+"""Distributed deep reinforcement learning (survey §Distributed DRL):
+GORILA-style parallel Q-learning, A3C advantage actor-critic, IMPALA
+actor-learner with V-trace, DPPO, and Ape-X prioritized replay — all as
+JAX-native vectorized implementations (see DESIGN.md §7 for how the
+surveyed async architectures map to XLA's bulk-synchronous model)."""

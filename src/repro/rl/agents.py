@@ -1,0 +1,329 @@
+"""Distributed DRL architectures from the survey, adapted to JAX's
+single-controller model (asynchrony -> bounded staleness; DESIGN.md §7):
+
+* GORILA (ref 98): N parallel actors fill a shared replay; the learner
+  Q-learns from replay with a periodically-synced target network; actors
+  act with parameters `sync_every` learner-steps stale.
+* A3C (ref 100): W actor-learners compute advantage actor-critic gradients
+  on their own rollouts; updates are applied as one merged (summed)
+  gradient per round — the decorrelation-by-diverse-exploration effect is
+  kept (each worker has its own env stream), the lock-free race is not.
+* IMPALA (ref 101): actors roll out with STALE policy parameters; the
+  central learner applies V-trace-corrected updates.  The staleness knob
+  reproduces the off-policy gap V-trace exists to close (tested: learning
+  survives staleness with V-trace, degrades without).
+* DPPO (ref 102): workers compute PPO clipped-surrogate gradients on their
+  shards; synchronous gradient averaging (the variant the paper found
+  better).
+* Ape-X (ref 104): GORILA's actors + prioritized replay from replay.py.
+
+Networks are plain pytree MLPs; everything jit/vmap/scan-able.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl import replay as RP
+from repro.rl.env import ChainEnv, batched_rollout
+from repro.rl.vtrace import vtrace
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# tiny MLP nets
+# ---------------------------------------------------------------------------
+def mlp_init(key, sizes) -> Pytree:
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({"w": jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5,
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_apply(params, x) -> jax.Array:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def ac_init(key, obs_dim, num_actions, hidden=64):
+    kp, kv = jax.random.split(key)
+    return {"pi": mlp_init(kp, (obs_dim, hidden, num_actions)),
+            "v": mlp_init(kv, (obs_dim, hidden, 1))}
+
+
+def policy_logits(params, obs):
+    return mlp_apply(params["pi"], obs)
+
+
+def value(params, obs):
+    return mlp_apply(params["v"], obs)[..., 0]
+
+
+def _sgd(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+# ---------------------------------------------------------------------------
+# GORILA / Ape-X: parallel actors -> (prioritized) replay -> Q learner
+# ---------------------------------------------------------------------------
+class QLearnerState(NamedTuple):
+    params: Pytree
+    target: Pytree
+    replay: RP.Replay
+    env_states: Pytree
+    step: jax.Array
+
+
+def q_init(env: ChainEnv, key, *, actors: int = 4,
+           capacity: int = 4096, hidden: int = 64) -> QLearnerState:
+    kq, ke = jax.random.split(key)
+    params = mlp_init(kq, (env.obs_dim, hidden, env.num_actions))
+    item = {"obs": jax.ShapeDtypeStruct((env.obs_dim,), jnp.float32),
+            "action": jax.ShapeDtypeStruct((), jnp.int32),
+            "reward": jax.ShapeDtypeStruct((), jnp.float32),
+            "done": jax.ShapeDtypeStruct((), jnp.float32),
+            "next_obs": jax.ShapeDtypeStruct((env.obs_dim,), jnp.float32)}
+    rep = RP.replay_init(capacity, item)
+    states = jax.vmap(env.reset)(jax.random.split(ke, actors))
+    return QLearnerState(params, params, rep, states, jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("env", "rollout_len", "batch",
+                                             "sync_every", "prioritized"))
+def gorila_round(state: QLearnerState, key, *, env: ChainEnv,
+                 rollout_len: int = 16, batch: int = 64,
+                 gamma: float = 0.97, lr: float = 5e-2, eps: float = 0.2,
+                 sync_every: int = 8, prioritized: bool = False
+                 ) -> Tuple[QLearnerState, Dict]:
+    """One acting+learning round.  prioritized=True -> Ape-X."""
+    ka, ks, kl = jax.random.split(key, 3)
+    actors = jax.tree_util.tree_leaves(state.env_states)[0].shape[0]
+
+    # --- parallel acting (eps-greedy with the actor replica of params) ---
+    def eps_greedy_logits(params, obs):
+        q = mlp_apply(params, obs)
+        greedy = jax.nn.one_hot(jnp.argmax(q, -1), q.shape[-1])
+        probs = (1 - eps) * greedy + eps / q.shape[-1]
+        return jnp.log(probs + 1e-9)
+
+    env_states, traj = batched_rollout(
+        env, state.params, eps_greedy_logits, state.env_states,
+        jax.random.split(ka, actors), rollout_len)
+    # next_obs: obs shifted by one within each actor's rollout
+    next_obs = jnp.concatenate(
+        [traj["obs"][:, 1:],
+         jax.vmap(lambda s: env.obs(s))(env_states)[:, None]], axis=1)
+    flat = {
+        "obs": traj["obs"].reshape(-1, env.obs_dim),
+        "action": traj["action"].reshape(-1),
+        "reward": traj["reward"].reshape(-1),
+        "done": traj["done"].reshape(-1),
+        "next_obs": next_obs.reshape(-1, env.obs_dim),
+    }
+    # priorities of fresh data = |TD error| under current params
+    q_next = jnp.max(mlp_apply(state.params, flat["next_obs"]), -1)
+    targets = flat["reward"] + gamma * (1 - flat["done"]) * q_next
+    q_cur = jnp.take_along_axis(mlp_apply(state.params, flat["obs"]),
+                                flat["action"][:, None], 1)[:, 0]
+    rep = RP.replay_add(state.replay, flat, targets - q_cur)
+
+    # --- learner: one Q step from replay ---
+    items, idx, is_w = RP.replay_sample(rep, ks, batch)
+    if not prioritized:
+        is_w = jnp.ones_like(is_w)
+
+    def loss_fn(params):
+        qn = jnp.max(mlp_apply(state.target, items["next_obs"]), -1)
+        tgt = items["reward"] + gamma * (1 - items["done"]) * qn
+        qc = jnp.take_along_axis(mlp_apply(params, items["obs"]),
+                                 items["action"][:, None], 1)[:, 0]
+        td = tgt - qc
+        return jnp.mean(is_w * td ** 2), td
+
+    (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+    params = _sgd(state.params, grads, lr)
+    if prioritized:
+        rep = RP.replay_update_priorities(rep, idx, td)
+
+    step = state.step + 1
+    target = jax.tree_util.tree_map(
+        lambda t, p: jnp.where(step % sync_every == 0, p, t),
+        state.target, params)
+    new = QLearnerState(params, target, rep, env_states, step)
+    return new, {"loss": loss, "mean_td": jnp.mean(jnp.abs(td))}
+
+
+def greedy_q_policy(params, obs):
+    return mlp_apply(params, obs)  # argmax of logits == argmax of Q
+
+
+# ---------------------------------------------------------------------------
+# A3C: W advantage-actor-critic workers, merged online updates
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("env", "rollout_len"))
+def a3c_round(params, env_states, key, *, env: ChainEnv,
+              rollout_len: int = 16, gamma: float = 0.97,
+              lr: float = 5e-2, entropy_coef: float = 0.01,
+              value_coef: float = 0.5) -> Tuple[Pytree, Pytree, Dict]:
+    workers = jax.tree_util.tree_leaves(env_states)[0].shape[0]
+    env_states, traj = batched_rollout(
+        env, params, policy_logits, env_states,
+        jax.random.split(key, workers), rollout_len)
+    boot_obs = jax.vmap(lambda s: env.obs(s))(env_states)
+
+    def worker_grad(traj_w, boot_w):
+        def loss_fn(p):
+            v = value(p, traj_w["obs"])               # (T,)
+            boot = value(p, boot_w)
+            disc = gamma * (1 - traj_w["done"])
+
+            def ret_body(carry, inp):
+                r, d = inp
+                carry = r + d * carry
+                return carry, carry
+
+            _, g = jax.lax.scan(ret_body, boot, (traj_w["reward"], disc),
+                                reverse=True)
+            adv = jax.lax.stop_gradient(g - v)
+            logits = policy_logits(p, traj_w["obs"])
+            logp = jax.nn.log_softmax(logits)
+            lp_a = jnp.take_along_axis(logp, traj_w["action"][:, None],
+                                       1)[:, 0]
+            ent = -jnp.sum(jnp.exp(logp) * logp, -1)
+            pg = -jnp.mean(lp_a * adv)
+            vl = jnp.mean((jax.lax.stop_gradient(g) - v) ** 2)
+            return pg + value_coef * vl - entropy_coef * jnp.mean(ent)
+        return jax.value_and_grad(loss_fn)(params)
+
+    losses, grads_w = jax.vmap(worker_grad)(traj, boot_obs)
+    # merged online update (sum of worker gradients ~ Hogwild's net effect)
+    grads = jax.tree_util.tree_map(lambda g: jnp.sum(g, 0), grads_w)
+    params = _sgd(params, grads, lr / workers)
+    return params, env_states, {"loss": jnp.mean(losses)}
+
+
+# ---------------------------------------------------------------------------
+# IMPALA: stale actors + central V-trace learner
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("env", "rollout_len",
+                                             "use_vtrace"))
+def impala_round(params, actor_params, env_states, key, *, env: ChainEnv,
+                 rollout_len: int = 16, gamma: float = 0.97,
+                 lr: float = 5e-2, entropy_coef: float = 0.01,
+                 value_coef: float = 0.5, use_vtrace: bool = True
+                 ) -> Tuple[Pytree, Pytree, Dict]:
+    """actor_params is the STALE replica used for acting; the caller decides
+    when to refresh it (actor_params <- params), i.e. the staleness."""
+    workers = jax.tree_util.tree_leaves(env_states)[0].shape[0]
+    env_states, traj = batched_rollout(
+        env, actor_params, policy_logits, env_states,
+        jax.random.split(key, workers), rollout_len)
+    boot_obs = jax.vmap(lambda s: env.obs(s))(env_states)
+
+    def worker_loss(p, traj_w, boot_w):
+        v = value(p, traj_w["obs"])
+        boot = value(p, boot_w)
+        disc = gamma * (1 - traj_w["done"])
+        t_logits = policy_logits(p, traj_w["obs"])
+        t_logp_all = jax.nn.log_softmax(t_logits)
+        t_logp = jnp.take_along_axis(t_logp_all, traj_w["action"][:, None],
+                                     1)[:, 0]
+        b_logp = jnp.take_along_axis(jax.nn.log_softmax(traj_w["logits"]),
+                                     traj_w["action"][:, None], 1)[:, 0]
+        if use_vtrace:
+            vt = vtrace(b_logp, jax.lax.stop_gradient(t_logp),
+                        traj_w["reward"], disc, jax.lax.stop_gradient(v),
+                        jax.lax.stop_gradient(boot))
+            vs, pg_adv = vt.vs, vt.pg_adv
+        else:  # naive on-policy targets on off-policy data
+            def ret_body(carry, inp):
+                r, d = inp
+                return r + d * carry, r + d * carry
+            _, vs = jax.lax.scan(ret_body, jax.lax.stop_gradient(boot),
+                                 (traj_w["reward"], disc), reverse=True)
+            pg_adv = vs - jax.lax.stop_gradient(v)
+        ent = -jnp.sum(jnp.exp(t_logp_all) * t_logp_all, -1)
+        pg = -jnp.mean(t_logp * pg_adv)
+        vl = jnp.mean((vs - v) ** 2)
+        return pg + value_coef * vl - entropy_coef * jnp.mean(ent)
+
+    def total_loss(p):
+        return jnp.mean(jax.vmap(lambda t, b: worker_loss(p, t, b))(
+            traj, boot_obs))
+
+    loss, grads = jax.value_and_grad(total_loss)(params)
+    params = _sgd(params, grads, lr)
+    return params, env_states, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# DPPO: synchronous distributed PPO
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("env", "rollout_len",
+                                             "ppo_epochs"))
+def dppo_round(params, env_states, key, *, env: ChainEnv,
+               rollout_len: int = 16, gamma: float = 0.97,
+               lr: float = 5e-2, clip: float = 0.2, ppo_epochs: int = 4,
+               entropy_coef: float = 0.01, value_coef: float = 0.5
+               ) -> Tuple[Pytree, Pytree, Dict]:
+    workers = jax.tree_util.tree_leaves(env_states)[0].shape[0]
+    env_states, traj = batched_rollout(
+        env, params, policy_logits, env_states,
+        jax.random.split(key, workers), rollout_len)
+    boot_obs = jax.vmap(lambda s: env.obs(s))(env_states)
+
+    # advantages under the data-collection params (frozen)
+    def worker_adv(traj_w, boot_w):
+        v = value(params, traj_w["obs"])
+        boot = value(params, boot_w)
+        disc = gamma * (1 - traj_w["done"])
+
+        def ret_body(carry, inp):
+            r, d = inp
+            return r + d * carry, r + d * carry
+
+        _, g = jax.lax.scan(ret_body, boot, (traj_w["reward"], disc),
+                            reverse=True)
+        return g, g - v
+
+    returns, advs = jax.vmap(worker_adv)(traj, boot_obs)
+    old_logp = jnp.take_along_axis(
+        jax.nn.log_softmax(traj["logits"]),
+        traj["action"][..., None], -1)[..., 0]
+
+    def worker_grad(p, traj_w, ret_w, adv_w, old_w):
+        def loss_fn(p):
+            logits = policy_logits(p, traj_w["obs"])
+            logp_all = jax.nn.log_softmax(logits)
+            logp = jnp.take_along_axis(logp_all, traj_w["action"][:, None],
+                                       1)[:, 0]
+            ratio = jnp.exp(logp - old_w)
+            surr = jnp.minimum(
+                ratio * adv_w,
+                jnp.clip(ratio, 1 - clip, 1 + clip) * adv_w)
+            ent = -jnp.sum(jnp.exp(logp_all) * logp_all, -1)
+            v = value(p, traj_w["obs"])
+            vl = jnp.mean((ret_w - v) ** 2)
+            return -jnp.mean(surr) + value_coef * vl \
+                - entropy_coef * jnp.mean(ent)
+        return jax.value_and_grad(loss_fn)(p)
+
+    loss = jnp.zeros(())
+    for _ in range(ppo_epochs):
+        losses, grads_w = jax.vmap(
+            lambda t, r, a, o: worker_grad(params, t, r, a, o))(
+            traj, returns, advs, old_logp)
+        # synchronous gradient averaging (the paper's preferred variant)
+        grads = jax.tree_util.tree_map(lambda g: jnp.mean(g, 0), grads_w)
+        params = _sgd(params, grads, lr)
+        loss = jnp.mean(losses)
+    return params, env_states, {"loss": loss}

@@ -1,0 +1,63 @@
+"""Ape-X style prioritized experience replay (survey ref 104).
+
+A fixed-capacity ring buffer holding transitions with per-item priorities
+p_i = |TD error|^alpha; sampling is proportional to priority with
+importance-sampling weights w_i = (N p_i)^-beta / max w.  Pure-JAX: the
+buffer is a pytree of arrays, add/sample are jit-able, so the "many actors
+feed one replay" pattern runs as a single vectorized program (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Replay(NamedTuple):
+    storage: Pytree       # leaves (capacity, ...)
+    priorities: jax.Array  # (capacity,) p^alpha, 0 = empty slot
+    cursor: jax.Array      # () int32 next write slot
+    size: jax.Array        # () int32 items stored
+
+
+def replay_init(capacity: int, item_spec: Pytree) -> Replay:
+    storage = jax.tree_util.tree_map(
+        lambda s: jnp.zeros((capacity,) + tuple(s.shape), s.dtype), item_spec)
+    return Replay(storage, jnp.zeros((capacity,)),
+                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def replay_add(rep: Replay, items: Pytree, priorities: jax.Array,
+               *, alpha: float = 0.6) -> Replay:
+    """Add a batch of n items (leaves (n, ...)) with |TD| priorities."""
+    n = priorities.shape[0]
+    cap = rep.priorities.shape[0]
+    idx = (rep.cursor + jnp.arange(n)) % cap
+    storage = jax.tree_util.tree_map(
+        lambda buf, x: buf.at[idx].set(x), rep.storage, items)
+    prios = rep.priorities.at[idx].set(
+        jnp.power(jnp.abs(priorities) + 1e-6, alpha))
+    return Replay(storage, prios, (rep.cursor + n) % cap,
+                  jnp.minimum(rep.size + n, cap))
+
+
+def replay_sample(rep: Replay, key, batch: int,
+                  *, beta: float = 0.4) -> Tuple[Pytree, jax.Array, jax.Array]:
+    """Returns (items, indices, is_weights)."""
+    p = rep.priorities / jnp.clip(jnp.sum(rep.priorities), 1e-9)
+    idx = jax.random.choice(key, p.shape[0], (batch,), p=p)
+    items = jax.tree_util.tree_map(lambda buf: buf[idx], rep.storage)
+    n = jnp.maximum(rep.size, 1).astype(jnp.float32)
+    w = jnp.power(n * jnp.clip(p[idx], 1e-12), -beta)
+    w = w / jnp.max(w)
+    return items, idx, w
+
+
+def replay_update_priorities(rep: Replay, idx, td_errors,
+                             *, alpha: float = 0.6) -> Replay:
+    prios = rep.priorities.at[idx].set(
+        jnp.power(jnp.abs(td_errors) + 1e-6, alpha))
+    return rep._replace(priorities=prios)

@@ -1,0 +1,64 @@
+"""V-trace off-policy correction (IMPALA, survey ref 101).
+
+Given behavior log-probs mu and target log-probs pi along a trajectory,
+truncated importance weights rho/c correct the value targets so a learner
+can consume STALE actor data — the mechanism that lets IMPALA decouple
+acting from learning.
+
+  delta_t = rho_t (r_t + gamma_t V(x_{t+1}) - V(x_t))
+  vs_t - V(x_t) = delta_t + gamma_t c_t (vs_{t+1} - V(x_{t+1}))
+  pg_adv_t = rho_t (r_t + gamma_t vs_{t+1} - V(x_t))
+
+When mu == pi and clips >= 1: rho = c = 1 and vs reduces to the on-policy
+n-step return (tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceOut(NamedTuple):
+    vs: jax.Array       # (T,) corrected value targets
+    pg_adv: jax.Array   # (T,) policy-gradient advantages
+
+
+def vtrace(behavior_logp, target_logp, rewards, discounts, values,
+           bootstrap_value, *, clip_rho: float = 1.0,
+           clip_c: float = 1.0) -> VTraceOut:
+    """All args (T,); discounts = gamma * (1 - done); values = V(x_t).
+
+    bootstrap_value = V(x_{T}) (value of the state after the last step)."""
+    log_is = target_logp - behavior_logp
+    rho = jnp.minimum(jnp.exp(log_is), clip_rho)
+    c = jnp.minimum(jnp.exp(log_is), clip_c)
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]])
+    deltas = rho * (rewards + discounts * values_tp1 - values)
+
+    def body(carry, inp):
+        delta, disc, c_t = inp
+        carry = delta + disc * c_t * carry
+        return carry, carry
+
+    _, diffs = jax.lax.scan(body, jnp.zeros(()),
+                            (deltas, discounts, c), reverse=True)
+    vs = values + diffs
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]])
+    pg_adv = rho * (rewards + discounts * vs_tp1 - values)
+    return VTraceOut(jax.lax.stop_gradient(vs),
+                     jax.lax.stop_gradient(pg_adv))
+
+
+def nstep_returns(rewards, discounts, bootstrap_value) -> jax.Array:
+    """On-policy n-step (Monte-Carlo-to-bootstrap) returns, for tests."""
+
+    def body(carry, inp):
+        r, d = inp
+        carry = r + d * carry
+        return carry, carry
+
+    _, g = jax.lax.scan(body, bootstrap_value, (rewards, discounts),
+                        reverse=True)
+    return g

@@ -1,0 +1,166 @@
+"""Survey §Distributed classification / clustering claims, validated:
+
+* distributed boosting ≈ centralized accuracy; Cooper alg 2 uses far less
+  communication than alg 1 (ref 44)
+* distributed SVM (gradient all-reduce) == centralized full-batch; DPSVM
+  reaches similar accuracy with fewer communicated floats than shipping
+  shards (ref 48)
+* distributed k-means == centralized Lloyd on pooled data (refs 57-61);
+  inertia is monotone non-increasing; iterative consensus agrees with the
+  closed-form all-reduce (ref 58)
+* fuzzy c-means objective decreases; Xie-Beni selects the true k (ref 54)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.classic import boosting as B
+from repro.classic import kmeans as KM
+from repro.classic import svm as S
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _two_blobs(n=512, d=8, sep=2.0, key=KEY):
+    k1, k2, k3 = jax.random.split(key, 3)
+    y = jnp.where(jax.random.uniform(k1, (n,)) < 0.5, 1.0, -1.0)
+    mu = sep * jnp.ones((d,)) / np.sqrt(d)
+    x = y[:, None] * mu[None] + jax.random.normal(k2, (n, d))
+    return x, y
+
+
+def _shard(x, y, W):
+    n = x.shape[0] // W
+    return x[: n * W].reshape(W, n, -1), y[: n * W].reshape(W, n)
+
+
+# ---------------------------------------------------------------------------
+# boosting
+# ---------------------------------------------------------------------------
+def test_adaboost_centralized_drives_error_down():
+    x, y = _two_blobs()
+    m5 = B.adaboost_centralized(x, y, rounds=5)
+    m30 = B.adaboost_centralized(x, y, rounds=30)
+    e5 = float(B.error_rate(m5, x, y))
+    e30 = float(B.error_rate(m30, x, y))
+    assert e30 <= e5
+    assert e30 < 0.1
+
+
+def test_dist_full_boosting_equals_centralized():
+    """Cooper alg 1 computes exact global stump errors -> identical model."""
+    x, y = _two_blobs()
+    W = 4
+    x_w, y_w = _shard(x, y, W)
+    grid = B.StumpGrid.from_data(x)
+    mc = B.adaboost_centralized(x_w.reshape(-1, x.shape[1]),
+                                y_w.reshape(-1), rounds=10, grid=grid)
+    md = B.adaboost_dist_full(x_w, y_w, rounds=10, grid=grid)
+    np.testing.assert_array_equal(np.asarray(mc["d"]), np.asarray(md["d"]))
+    np.testing.assert_array_equal(np.asarray(mc["t"]), np.asarray(md["t"]))
+    np.testing.assert_allclose(np.asarray(mc["alpha"]),
+                               np.asarray(md["alpha"]), rtol=1e-5)
+
+
+def test_dist_sample_boosting_cheap_and_accurate():
+    """Cooper alg 2: ~accuracy of alg 1 at a fraction of the communication."""
+    x, y = _two_blobs(n=1024)
+    x_w, y_w = _shard(x, y, 4)
+    m_full = B.adaboost_dist_full(x_w, y_w, rounds=20)
+    m_samp = B.adaboost_dist_sample(x_w, y_w, rounds=20)
+    e_full = float(B.error_rate(m_full, x, y))
+    e_samp = float(B.error_rate(m_samp, x, y))
+    assert m_samp["comm_floats"] < m_full["comm_floats"] / 10
+    assert e_samp < e_full + 0.05  # within 5 points of the exact variant
+
+
+# ---------------------------------------------------------------------------
+# SVM
+# ---------------------------------------------------------------------------
+def test_svm_dist_gradient_equals_centralized():
+    x, y = _two_blobs()
+    x_w, y_w = _shard(x, y, 4)
+    pc, _ = S.svm_centralized(x_w.reshape(-1, x.shape[1]), y_w.reshape(-1),
+                              steps=200)
+    pd, _ = S.svm_dist_gradient(x_w, y_w, steps=200)
+    np.testing.assert_allclose(np.asarray(pc["w"]), np.asarray(pd["w"]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dpsvm_accuracy_and_communication():
+    x, y = _two_blobs(n=1024, sep=2.5)
+    W = 4
+    x_w, y_w = _shard(x, y, W)
+    pc, _ = S.svm_centralized(x, y, steps=400)
+    pd, info = S.dpsvm(x_w, y_w, hops=W, local_steps=200, sv_capacity=64)
+    acc_c = float(S.accuracy(pc, x, y))
+    acc_d = float(S.accuracy(pd, x, y))
+    assert acc_d > acc_c - 0.03  # near-centralized accuracy
+    assert info["comm_floats"] < info["full_exchange_floats"]  # ref 48 claim
+
+
+def test_svm_objective_decreases():
+    x, y = _two_blobs()
+    _, hist = S.svm_centralized(x, y, steps=300)
+    h = np.asarray(hist)
+    assert h[-1] < h[10]
+
+
+# ---------------------------------------------------------------------------
+# k-means / consensus / fuzzy c-means
+# ---------------------------------------------------------------------------
+def _blobs3(n=600, d=4, key=KEY):
+    ks = jax.random.split(key, 4)
+    mus = jnp.array([[4.0] * d, [-4.0] * d, [4.0] * (d // 2) + [-4.0] * (d - d // 2)])
+    assign = jax.random.randint(ks[0], (n,), 0, 3)
+    x = mus[assign] + jax.random.normal(ks[1], (n, d))
+    return x, assign
+
+
+def test_distributed_kmeans_equals_centralized():
+    x, _ = _blobs3()
+    W = 4
+    x_w = x.reshape(W, -1, x.shape[1])
+    cd, hist_d = KM.kmeans_fit(x_w, k=3, iters=15)
+    cc, hist_c = KM.kmeans_centralized(x, k=3, iters=15)
+    np.testing.assert_allclose(np.asarray(cd), np.asarray(cc), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hist_d), np.asarray(hist_c),
+                               rtol=1e-5)
+
+
+def test_kmeans_inertia_monotone():
+    x, _ = _blobs3()
+    x_w = x.reshape(4, -1, x.shape[1])
+    _, hist = KM.kmeans_fit(x_w, k=3, iters=15)
+    h = np.asarray(hist)
+    assert np.all(h[1:] <= h[:-1] + 1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8))
+def test_iterative_consensus_converges_to_allreduce(W):
+    """Gossip consensus (ref 58) -> the closed-form weighted mean."""
+    key = jax.random.PRNGKey(W)
+    vals = jax.random.normal(key, (W, 5))
+    wts = jnp.abs(jax.random.normal(jax.random.PRNGKey(W + 1), (W,))) + 0.5
+    out = KM.consensus_mean(vals, wts, rounds=400)
+    want = jnp.sum(vals * wts[:, None], 0) / jnp.sum(wts)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(np.asarray(want), out.shape),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_xie_beni_selects_true_k():
+    x, _ = _blobs3(n=900)
+    x_w = x.reshape(3, -1, x.shape[1])
+    scores = {}
+    for k in (2, 3, 5):
+        key = jax.random.PRNGKey(k)
+        idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+        c = x[idx]
+        for _ in range(25):
+            c, _ = KM.fuzzy_cmeans_step(x_w, c)
+        scores[k] = float(KM.xie_beni(x_w, c))
+    assert scores[3] == min(scores.values())  # ref 54: XB minimized at true k

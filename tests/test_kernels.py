@@ -1,0 +1,197 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode on CPU) vs ref.py
+pure-jnp oracles, across shapes and dtypes, plus hypothesis property tests
+on the kernels' invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.nat_compress import nc_pack, nc_unpack
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels import ref as R
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(B, S, T, Hq, Hk, dh, dtype):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (B, S, Hq, dh)).astype(dtype)
+    k = jax.random.normal(kk, (B, T, Hk, dh)).astype(dtype)
+    v = jax.random.normal(kv, (B, T, Hk, dh)).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FA_SHAPES = [
+    # B, S, T, Hq, Hk, dh, causal, window
+    (2, 256, 256, 8, 2, 64, True, None),    # GQA group 4
+    (1, 128, 384, 4, 4, 128, True, None),   # MHA, S < T (suffix decode)
+    (2, 256, 256, 8, 4, 64, True, 128),     # sliding window
+    (1, 200, 256, 4, 2, 64, True, None),    # unpadded q length
+    (2, 128, 128, 4, 2, 64, False, None),   # non-causal (encoder)
+    (1, 384, 384, 32, 8, 64, True, None),   # many heads
+]
+
+
+@pytest.mark.parametrize("B,S,T,Hq,Hk,dh,causal,window", FA_SHAPES)
+def test_flash_attention_matches_ref(B, S, T, Hq, Hk, dh, causal, window):
+    q, k, v = _qkv(B, S, T, Hq, Hk, dh, jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 2e-2),
+                                       (jnp.float32, 2e-5)])
+def test_flash_attention_dtypes(dtype, tol):
+    q, k, v = _qkv(2, 256, 256, 8, 2, 64, dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = R.attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128), (256, 256)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Output must not depend on the BlockSpec tiling."""
+    q, k, v = _qkv(1, 256, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    ref = R.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel must agree with the model stack's attention math."""
+    from repro.models.attention import _gqa_scores, _gqa_out, causal_mask, NEG_INF
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(num_heads=8, num_kv_heads=2, d_model=512, head_dim=64)
+    q, k, v = _qkv(2, 128, 128, 8, 2, 64, jnp.float32)
+    scores = _gqa_scores(q, k, cfg)
+    scores = jnp.where(causal_mask(128, 128)[None, None, None], scores, NEG_INF)
+    ref = _gqa_out(jax.nn.softmax(scores, -1), v)
+    out = flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk scan
+# ---------------------------------------------------------------------------
+SSD_SHAPES = [
+    # B, S, H, P, N, chunk
+    (2, 256, 4, 64, 64, 128),
+    (1, 128, 2, 32, 16, 64),
+    (2, 512, 3, 64, 64, 128),
+    (1, 256, 1, 128, 32, 256),   # single chunk
+    (1, 384, 2, 64, 64, 128),    # 3 chunks
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", SSD_SHAPES)
+def test_ssd_scan_matches_sequential_ref(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 4)
+    xe = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    loga = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    b = jax.random.normal(ks[2], (B, S, N))
+    c = jax.random.normal(ks[3], (B, S, N))
+    y, fin = ssd_scan(xe, loga, b, c, chunk=chunk, interpret=True)
+    yr, fr = R.ssd_ref(xe, loga, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_matches_model_ssd_chunked():
+    """Kernel vs the model stack's jnp SSD (ssd_chunked) on the same inputs."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N, Q = 2, 256, 4, 64, 64, 128
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.1
+    b = jax.random.normal(ks[3], (B, S, N))
+    c = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.zeros((H,))
+    y_model, f_model = ssd_chunked(x, dt, A_log, b, c, D, Q)
+    loga = -dt * jnp.exp(A_log)[None, None]
+    xe = x * dt[..., None]
+    y_kern, f_kern = ssd_scan(xe, loga, b, c, chunk=Q, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_model),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f_kern), np.asarray(f_model),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_ssd_scan_chunk_invariance(seed):
+    """The chunk size is a tiling choice; the result must not depend on it."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    B, S, H, P, N = 1, 256, 2, 32, 16
+    xe = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    loga = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.2
+    b = jax.random.normal(ks[2], (B, S, N))
+    c = jax.random.normal(ks[3], (B, S, N))
+    y64, f64 = ssd_scan(xe, loga, b, c, chunk=64, interpret=True)
+    y128, f128 = ssd_scan(xe, loga, b, c, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y64), np.asarray(y128),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f64), np.asarray(f128),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# natural compression
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1000,), (256, 129), (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nc_pack_matches_ref(shape, dtype):
+    kx, ku = jax.random.split(KEY)
+    x = (jax.random.normal(kx, shape) * 10).astype(dtype)
+    # oracle needs the identical uniforms: replicate the wrapper's draw
+    u = jax.random.uniform(ku, (int(np.prod(shape)),), jnp.float32)
+    packed = nc_pack(x, ku, interpret=True)
+    ref = R.nc_pack_ref(x.reshape(-1).astype(jnp.float32), u).reshape(shape)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref))
+    # unpack must invert to exact powers of two
+    y = nc_unpack(packed, interpret=True)
+    yr = R.nc_unpack_ref(ref)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr.reshape(shape)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 1e4))
+def test_nc_kernel_roundtrip_bounded(seed, scale):
+    """|roundtrip(x)/x| in [0.5, 2] for nonzero x, sign preserved."""
+    k = jax.random.PRNGKey(seed)
+    kx, ku = jax.random.split(k)
+    x = jax.random.normal(kx, (512,)) * scale
+    y = nc_unpack(nc_pack(x, ku, interpret=True), interpret=True)
+    xn, yn = np.asarray(x), np.asarray(y)
+    nz = xn != 0
+    ratio = np.abs(yn[nz]) / np.abs(xn[nz])
+    assert np.all((ratio >= 0.5 - 1e-6) & (ratio <= 2.0 + 1e-6))
+    assert np.all(np.sign(yn[nz]) == np.sign(xn[nz]))
+
+
+def test_nc_kernel_unbiased():
+    """E[unpack(pack(x))] = x (the paper's key property)."""
+    kx = jax.random.PRNGKey(3)
+    x = jax.random.normal(kx, (256,))
+    ks = jax.random.split(jax.random.PRNGKey(4), 256)
+    samples = jnp.stack([nc_unpack(nc_pack(x, k, interpret=True),
+                                   interpret=True) for k in ks[:64]])
+    mean = jnp.mean(samples, 0)
+    err = jnp.abs(mean - x)
+    assert bool(jnp.all(err <= jnp.abs(x) * 0.5 + 1e-6))

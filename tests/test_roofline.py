@@ -1,0 +1,74 @@
+"""Roofline machinery: the HLO collective-bytes parser against synthetic
+HLO text, model_flops against hand counts, term arithmetic and
+bottleneck selection."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, Roofline,
+                                 collective_bytes, model_flops)
+from repro.models.config import ModelConfig, param_count
+
+
+def test_collective_parser_counts_ops():
+    hlo = """
+  %ag = bf16[128,256] all-gather(%x), dimensions={0}
+  %ar.1 = f32[1024] all-reduce(%y), to_apply=%add
+  %rs = f32[64,32] reduce-scatter(%z), dimensions={0}
+  %a2a.s = bf16[16,16] all-to-all-start(%w)
+  %a2a.d = bf16[16,16] all-to-all-done(%a2a.s)
+  %cp = u32[8] collective-permute(%v), source_target_pairs={{0,1}}
+  %not_me = f32[999] add(%a, %b)
+"""
+    total, by_op = collective_bytes(hlo)
+    assert by_op["all-gather"] == 128 * 256 * 2
+    assert by_op["all-reduce"] == 1024 * 4
+    assert by_op["reduce-scatter"] == 64 * 32 * 4
+    assert by_op["all-to-all"] == 16 * 16 * 2  # -start counted, -done not
+    assert by_op["collective-permute"] == 8 * 4
+    assert total == sum(by_op.values())
+
+
+def test_collective_parser_on_real_compile():
+    """A jit'd psum on a 1-device mesh has no cross-device collective;
+    the parser must return a non-negative finite count on real HLO text."""
+    f = jax.jit(lambda x: x @ x.T)
+    c = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    total, _ = collective_bytes(c.as_text())
+    assert total == 0
+
+
+def test_model_flops_dense_hand_count():
+    cfg = ModelConfig(arch_type="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=1000, activation="swiglu")
+    total, active = param_count(cfg)
+    emb = 1000 * 64 * 2
+    n_active = active - emb + 1000 * 64
+    assert model_flops(cfg, 16, 2, "train") == 6.0 * n_active * 32
+    assert model_flops(cfg, 16, 2, "prefill") == 2.0 * n_active * 32
+    assert model_flops(cfg, 16, 2, "decode") == 2.0 * n_active * 2
+
+
+def test_moe_param_count_active_vs_total():
+    cfg = ModelConfig(arch_type="moe", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128,
+                      expert_d_ff=128, vocab_size=1000, num_experts=8,
+                      top_k=2, activation="swiglu")
+    total, active = param_count(cfg)
+    assert total > active  # 8 experts stored, 2 active
+    expert = 3 * 64 * 128
+    assert total - active == 2 * (8 - 2) * expert  # 2 layers
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 flops_per_chip=197e12,       # exactly 1s of compute
+                 bytes_per_chip=819e9 * 2.0,  # 2s of memory
+                 coll_bytes_per_chip=50e9 * 0.5,  # 0.5s of collective
+                 coll_by_op={}, model_flops_total=197e12 * 256 * 0.5)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.step_time_lower_bound - 2.0) < 1e-9
+    assert abs(r.useful_ratio - 0.5) < 1e-9
