@@ -50,6 +50,8 @@ SHAPES: Dict[str, InputShape] = {
     "train_4k": InputShape("train_4k", 4_096, 256, "train"),
     "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    # continuous-batching decode: per-slot position vector + active mask
+    "decode_cb_32k": InputShape("decode_cb_32k", 32_768, 128, "decode_cb"),
     "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
 }
 

@@ -1,12 +1,19 @@
-"""Serving launcher: batched prefill + decode with a KV/state cache.
+"""Serving launcher: static batched serving or continuous batching.
 
-Implements the production serve path the decode dry-run shapes lower:
-a batch of requests is prefilled once (builds the cache), then decoded
-token-by-token with `serve_step` (one token against the cache).
+Static (default): a batch of requests is prefilled once (builds the cache),
+then decoded token-by-token in lockstep — the whole batch advances behind
+one scalar position and retires when its longest request finishes.
+
+Continuous (--continuous): the `repro.serving.ServeEngine` slot pool —
+per-request position vectors, active-mask gated cache updates, and FIFO
+admission that backfills a slot the moment its request retires, so a
+mixed-length request stream sustains near-full batch occupancy.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --continuous --requests 16 --batch 4 --prompt-len 64 --gen 32
 """
 from __future__ import annotations
 
@@ -20,70 +27,66 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import sharding as SH
 from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import sharded_argmax
 from repro.models import model as MD
 
 
-def serve(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _make_extra(cfg, B):
+    if cfg.arch_type == "vlm":
+        return jnp.zeros((B, cfg.num_patches, MD.VISION_EMBED_DIM),
+                         jnp.dtype(cfg.compute_dtype))
+    if cfg.arch_type == "audio":
+        return jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                         jnp.dtype(cfg.compute_dtype))
+    return None
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    if jax.default_backend() == "cpu":
-        cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
+
+def make_static_fns(cfg, cache_len, extra=None):
+    """Jitted (prefill, decode) pair for the static serve path — also the
+    baseline benchmarks/bench_serving.py measures against."""
+
+    @jax.jit
+    def prefill(params, tokens):
+        logits, _, cache = MD.forward(params, cfg, tokens,
+                                      extra_embeds=extra,
+                                      return_cache=True,
+                                      cache_len=cache_len)
+        # sharded_argmax keeps the model-sharded vocab dim sharded: a plain
+        # jnp.argmax re-all-gathers full logits every token (steps.py)
+        nxt = sharded_argmax(logits[:, -1])[:, None]
+        return nxt, cache
+
+    @jax.jit
+    def decode(params, tok, pos, cache):
+        logits, cache = MD.decode_step(params, cfg, tok, pos, cache)
+        nxt = sharded_argmax(logits[:, -1])[:, None]
+        return nxt, cache
+
+    return prefill, decode
+
+
+def _serve_static(params, cfg, args):
     B, S, G = args.batch, args.prompt_len, args.gen
-    cache_len = S + G
+    # the VLM prepends patch embeddings: the cache must hold them too
+    cache_len = S + G + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (B, S), 0, cfg.vocab_size)
+    prefill, decode = make_static_fns(cfg, cache_len, _make_extra(cfg, B))
 
-    mesh = make_host_mesh(args.data, args.model)
-    with SH.use_mesh(mesh), SH.axis_env(SH.DP_TP_ENV):
-        params = jax.jit(lambda k: MD.init_model(cfg, k))(
-            jax.random.PRNGKey(args.seed))
-        prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                     (B, S), 0, cfg.vocab_size)
-        extra = None
-        if cfg.arch_type == "vlm":
-            extra = jnp.zeros((B, cfg.num_patches, MD.VISION_EMBED_DIM),
-                              jnp.dtype(cfg.compute_dtype))
-        if cfg.arch_type == "audio":
-            extra = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
-                              jnp.dtype(cfg.compute_dtype))
+    t0 = time.time()
+    tok, cache = prefill(params, prompts)
+    tok.block_until_ready()
+    t_prefill = time.time() - t0
 
-        @jax.jit
-        def prefill(params, tokens):
-            logits, _, cache = MD.forward(params, cfg, tokens,
-                                          extra_embeds=extra,
-                                          return_cache=True,
-                                          cache_len=cache_len)
-            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            return nxt, cache
-
-        @jax.jit
-        def decode(params, tok, pos, cache):
-            logits, cache = MD.decode_step(params, cfg, tok, pos, cache)
-            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            return nxt, cache
-
-        t0 = time.time()
-        tok, cache = prefill(params, prompts)
-        tok.block_until_ready()
-        t_prefill = time.time() - t0
-
-        out = [tok]
-        t0 = time.time()
-        for i in range(G - 1):
-            # VLM caches include the patch prefix before the prompt tokens
-            pos = S + i + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
-            tok, cache = decode(params, tok, jnp.int32(pos), cache)
-            out.append(tok)
-        jax.block_until_ready(out[-1])
-        t_decode = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        # VLM caches include the patch prefix before the prompt tokens
+        pos = S + i + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
+        tok, cache = decode(params, tok, jnp.int32(pos), cache)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t0
 
     gen = np.asarray(jnp.concatenate(out, axis=1))
     tput = B * (G - 1) / max(t_decode, 1e-9)
@@ -92,6 +95,76 @@ def serve(argv=None) -> dict:
           f"({tput:.1f} tok/s incl. compile)")
     print("sample generation (first request):", gen[0, :16].tolist())
     return {"generated": gen, "t_prefill": t_prefill, "t_decode": t_decode}
+
+
+def _serve_continuous(params, cfg, args):
+    from repro.serving import Request, ServeEngine
+
+    rng = np.random.RandomState(args.seed + 1)
+    S, G = args.prompt_len, args.gen
+    # drawn lengths never exceed the CLI bounds: cache_len = S + G must
+    # hold the longest prompt plus the largest generation budget
+    plens = sorted({min(S, max(1, S // 2)), min(S, max(1, 3 * S // 4)), S})
+    gens = sorted({max(1, G // 4), max(1, G // 2), G})
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=int(rng.choice(plens))),
+                    max_new_tokens=int(rng.choice(gens)))
+            for i in range(args.requests)]
+
+    n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+    engine = ServeEngine(params, cfg, num_slots=args.batch,
+                         cache_len=S + G + n_prefix)
+    if cfg.arch_type in ("vlm", "audio"):
+        for r in reqs:
+            r.extra_embeds = _make_extra(cfg, 1)
+
+    t0 = time.time()
+    finished = engine.run(reqs)
+    dt = time.time() - t0
+    st = engine.stats()
+    tput = st["generated_tokens"] / max(dt, 1e-9)
+    print(f"arch={cfg.name} slots={args.batch} requests={args.requests} "
+          f"prompt<=~{S} gen<={G}")
+    print(f"continuous: {dt:.3f}s  {st['generated_tokens']} tokens "
+          f"({tput:.1f} tok/s incl. compile)  "
+          f"occupancy={st['occupancy']:.2f}  "
+          f"ticks={st['ticks']} (prefill {st['prefill_ticks']}, "
+          f"decode {st['decode_ticks']})")
+    print("sample generation (first request):",
+          finished[0].tokens[:16])
+    return {"finished": finished, "stats": st, "t_total": dt}
+
+
+def serve(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static: batch size; continuous: pool slots")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a slot pool "
+                         "(repro.serving.ServeEngine)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: number of requests in the stream")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if jax.default_backend() == "cpu":
+        cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
+
+    mesh = make_host_mesh(args.data, args.model)
+    with SH.use_mesh(mesh), SH.axis_env(SH.DP_TP_ENV):
+        params = jax.jit(lambda k: MD.init_model(cfg, k))(
+            jax.random.PRNGKey(args.seed))
+        if args.continuous:
+            return _serve_continuous(params, cfg, args)
+        return _serve_static(params, cfg, args)
 
 
 if __name__ == "__main__":

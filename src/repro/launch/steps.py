@@ -14,6 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import InputShape
 from repro.core import sharding as SH
+from repro.core.compression import natural_compress
 from repro.models import model as MD
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import clip_by_global_norm, get_optimizer, warmup_cosine
@@ -103,8 +104,15 @@ def make_train_step(cfg: ModelConfig, opt,
     def train_step(params, opt_state, batch, *args):
         loss, grads = jax.value_and_grad(MD.lm_loss)(params, cfg, batch)
         if compress_grads:
-            from repro.core.compression import natural_compress
-            key = args[0] if args else jax.random.PRNGKey(0)
+            if args:
+                key = args[0]
+            else:
+                # no key supplied: fold the optimizer's step counter into a
+                # fixed seed so each step draws FRESH compression randomness
+                # (a constant key re-uses the same rounding pattern every
+                # step, which breaks the unbiasedness argument across steps)
+                key = jax.random.fold_in(jax.random.PRNGKey(0),
+                                         opt_state["step"])
             leaves, treedef = jax.tree_util.tree_flatten(grads)
             keys = jax.random.split(key, len(leaves))
             grads = jax.tree_util.tree_unflatten(
@@ -148,6 +156,22 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
         nxt = sharded_argmax(logits[:, -1])[:, None]
         return nxt, new_cache
     return serve_step
+
+
+def make_serve_cb_step(cfg: ModelConfig) -> Callable:
+    """Continuous-batching decode tick: one token for EVERY pool slot.
+
+    pos: (B,) per-slot sequence lengths; active: (B,) bool slot liveness.
+    Retired slots are no-ops — their cache rows are kept and their token is
+    passed through unchanged, so the engine can keep ticking at full batch
+    while a slot waits for backfill."""
+    def serve_cb_step(params, cache, tokens, pos, active):
+        logits, new_cache = MD.decode_step(params, cfg, tokens, pos, cache,
+                                           active=active)
+        nxt = sharded_argmax(logits[:, -1])[:, None]
+        nxt = jnp.where(active[:, None], nxt, tokens)
+        return nxt, new_cache
+    return serve_cb_step
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +254,28 @@ def build_plan(cfg: ModelConfig, shape: InputShape, mesh,
             in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
                           NamedSharding(mesh, tok_spec),
                           NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, tok_spec), _ns(mesh, cspecs)),
+            donate_argnums=(1,),
+        )
+
+    if shape.kind == "decode_cb":
+        # continuous-batching decode: per-slot position vector + active mask,
+        # both sharded like the batch dim (a slot lives on one data shard)
+        cache_abs = MD.cache_specs(cfg, B, S)
+        cspecs = cache_pspecs(cfg, cache_abs)
+        tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        act_abs = jax.ShapeDtypeStruct((B,), jnp.bool_)
+        tok_spec = SH.resolve_spec((B, 1), ("batch", None))
+        row_spec = SH.resolve_spec((B,), ("batch",))
+        return StepPlan(
+            name=f"decode_cb[{cfg.name}x{shape.name}]",
+            fn=make_serve_cb_step(cfg),
+            args=(params_abs, cache_abs, tok_abs, pos_abs, act_abs),
+            in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                          NamedSharding(mesh, tok_spec),
+                          NamedSharding(mesh, row_spec),
+                          NamedSharding(mesh, row_spec)),
             out_shardings=(NamedSharding(mesh, tok_spec), _ns(mesh, cspecs)),
             donate_argnums=(1,),
         )

@@ -182,8 +182,14 @@ def kv_cache_specs(cfg: ModelConfig, batch: int, cache_len: int, layers: int,
 
 
 def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
-                     *, encoder_kv_cache=None):
-    """x: (B,1,d); cache_k/v: (B,C,Hk,dh); pos: () int32 current length.
+                     *, encoder_kv_cache=None, active=None):
+    """x: (B,1,d); cache_k/v: (B,C,Hk,dh); pos: () int32 current length,
+    or (B,) int32 — one position per batch row, so slots of a continuous-
+    batching pool can each decode at their own offset.
+
+    active: optional (B,) bool (vector-pos only): rows where it is False are
+    retired pool slots — their cache write is DROPPED (scatter to an out-of-
+    bounds row with mode="drop"), so a no-op costs nothing extra.
 
     Returns (y, new_cache_k, new_cache_v).  With a sliding window the cache
     is a ring buffer of size C=window; otherwise C >= pos+1.
@@ -191,29 +197,41 @@ def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
     B, _, _ = x.shape
     C = cache_k.shape[1]
     ring = cfg.attention_kind == "sliding_window"
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    pos_b = pos if per_row else jnp.broadcast_to(pos, (B,))  # (B,)
+    positions = pos_b[:, None]
     if encoder_kv_cache is not None:
         q = dense(x, p["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
         if cfg.qk_norm:
             q = head_rms_norm(q, p["q_scale"], cfg.norm_eps)
         k, v = encoder_kv_cache
-        valid = jnp.ones((k.shape[1],), bool)
+        valid = jnp.ones((B, k.shape[1]), bool)
         cache_k, cache_v = cache_k, cache_v  # untouched
         new_k, new_v = cache_k, cache_v
     else:
         q, k1, v1 = _project_qkv(p, x, positions, cfg)
         slot = jnp.mod(pos, C) if ring else pos
-        new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1, slot, axis=1)
-        new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1, slot, axis=1)
-        k, v = new_k, new_v
-        idx = jnp.arange(C)
-        if ring:
-            valid = (idx <= jnp.mod(pos, C)) | (pos >= C)
+        if per_row:
+            rows = jnp.arange(B)
+            if active is not None:
+                slot = jnp.where(active, slot, C)  # OOB -> write dropped
+            new_k = cache_k.at[rows, slot].set(k1[:, 0], mode="drop")
+            new_v = cache_v.at[rows, slot].set(v1[:, 0], mode="drop")
         else:
-            valid = idx <= pos
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1, slot,
+                                                        axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1, slot,
+                                                        axis=1)
+        k, v = new_k, new_v
+        idx = jnp.arange(C)[None, :]
+        if ring:
+            valid = (idx <= jnp.mod(pos_b, C)[:, None]) | (pos_b[:, None] >= C)
+        else:
+            valid = idx <= pos_b[:, None]  # (B,C)
     q = shard(q, "batch", None, "model", None)
     scores = _gqa_scores(q, k, cfg)  # (B,Hk,G,1,C)
-    scores = jnp.where(valid[None, None, None, None], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, v)
     y = dense(out.reshape(B, 1, -1), p["wo"])

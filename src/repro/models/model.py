@@ -292,12 +292,28 @@ def _run_rwkv(params, cfg, x, return_cache):
 # ---------------------------------------------------------------------------
 # Decode (one token against a cache)
 # ---------------------------------------------------------------------------
-def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
-    """tokens: (B,1) int32; pos: () int32 — current sequence length.
+def _gate_rows(active, new, old):
+    """Keep `old` batch rows where the slot is inactive. new/old: (B, ...)."""
+    a = active.reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(a, new, old)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
+                active=None):
+    """tokens: (B,1) int32; pos: () int32 current sequence length, or (B,)
+    int32 — one position per batch row (continuous batching: every slot of
+    the pool decodes at its own offset).
+
+    active: optional (B,) bool (requires vector pos) — rows where it is
+    False are retired slots: their cache/state updates are no-ops (KV
+    writes are dropped in-place, recurrent-state rows keep their old
+    value), so a pool can keep ticking while a slot waits for backfill.
 
     Returns (logits (B,1,V), new cache)."""
     at = cfg.arch_type
     B = tokens.shape[0]
+    if active is not None and jnp.asarray(pos).ndim != 1:
+        raise ValueError("active mask requires a per-row pos vector")
     x = jnp.take(params["embed"], tokens, axis=0).astype(
         jnp.dtype(cfg.compute_dtype))
     x = shard(x, "batch", None, None)
@@ -311,7 +327,8 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
                 lp, ck, cv = xs
                 xk = xv = None
             pre = rms_norm(h, lp["ln1"], cfg.norm_eps)
-            y, nk, nv = A.attention_decode(lp["attn"], pre, ck, cv, pos, cfg)
+            y, nk, nv = A.attention_decode(lp["attn"], pre, ck, cv, pos, cfg,
+                                           active=active)
             h = h + y
             if at == "audio":
                 hc = rms_norm(h, lp["lnc"], cfg.norm_eps)
@@ -334,11 +351,15 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
         new_cache = dict(cache, k=nk, v=nv)
 
     elif at == "hybrid":
-        x, new_cache = _decode_hybrid(params, cfg, x, pos, cache)
+        x, new_cache = _decode_hybrid(params, cfg, x, pos, cache,
+                                      active=active)
     elif at == "ssm":
         def body(h, xs):
             lp, st = xs
             h, nst = RW.rwkv_block(lp, h, cfg, state=st)
+            if active is not None:
+                nst = jax.tree_util.tree_map(
+                    lambda n, o: _gate_rows(active, n, o), nst, st)
             return h, nst
         x, nst = _scan(cfg, body, x, (params["blocks"], cache))
         new_cache = nst
@@ -350,7 +371,7 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
     return shard(logits, "batch", None, "model"), new_cache
 
 
-def _decode_hybrid(params, cfg, x, pos, cache):
+def _decode_hybrid(params, cfg, x, pos, cache, *, active=None):
     k_every = cfg.hybrid_attn_every
     shared = params["shared"]
 
@@ -360,13 +381,18 @@ def _decode_hybrid(params, cfg, x, pos, cache):
         pre = rms_norm(h, lp["ln"], cfg.norm_eps)
         y, (nst, nconv) = SSM.ssm_block(lp["ssm"], pre, cfg, state=st,
                                         conv_cache=conv)
+        if active is not None:
+            nst = _gate_rows(active, nst, st)
+            nconv = jax.tree_util.tree_map(
+                lambda n, o: _gate_rows(active, n, o), nconv, conv)
         h = h + y
         apply_shared = (idx + 1) % k_every == 0
 
         def with_shared(args):
             h, sk, sv = args
             pre = rms_norm(h, shared["ln1"], cfg.norm_eps)
-            y, nk, nv = A.attention_decode(shared["attn"], pre, sk, sv, pos, cfg)
+            y, nk, nv = A.attention_decode(shared["attn"], pre, sk, sv, pos,
+                                           cfg, active=active)
             h = h + y
             pre2 = rms_norm(h, shared["ln2"], cfg.norm_eps)
             h = h + M.mlp(shared["mlp"], pre2, cfg)
@@ -423,6 +449,19 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
     return jax.tree_util.tree_map(
         lambda s: jnp.zeros(s.shape, s.dtype),
         cache_specs(cfg, batch, cache_len))
+
+
+def write_cache_slot(pool_cache, request_cache, slot):
+    """Scatter one request's cache (batch==1, from a B=1 prefill) into batch
+    row `slot` of a slot-pool cache.
+
+    Works for every arch family because every cache leaf — KV (L,B,C,Hk,dh),
+    cross-KV, SSM state (L,B,H,N,P), conv ring (L,B,W-1,·), RWKV wkv/shift —
+    is laid out (stack, batch, ...): the write is a single batch-row scatter
+    per leaf."""
+    return jax.tree_util.tree_map(
+        lambda pool, one: pool.at[:, slot].set(one[:, 0].astype(pool.dtype)),
+        pool_cache, request_cache)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,52 @@
+"""Continuous-batching serving engine (slot-level admission scheduling).
+
+The static serve path (`launch/serve.py` without ``--continuous``) prefills
+one fixed batch and decodes it in lockstep behind a single scalar position:
+every request advances together and the batch retires only when its LONGEST
+request finishes.  That is precisely the straggler/synchronization cost the
+survey charges to bulk-synchronous distributed execution — the whole batch
+barrier-waits on its slowest member, and measured throughput degrades to the
+speed of the longest request.
+
+This package applies the survey's asynchrony playbook at the granularity of
+a *batch slot* instead of a worker:
+
+* **Slot pool** (`scheduler.SlotPool`): a fixed pool of B cache rows.  Each
+  slot runs its own request with its own position counter — the per-request
+  ``pos: (B,)`` vector threaded through ``model.decode_step`` — so slots
+  never synchronize on each other's progress.
+* **Admission = bounded-staleness work injection**: like async parameter-
+  server updates that apply whenever a worker shows up (rather than at a
+  barrier), a new request is admitted the moment a slot frees, mid-stream,
+  without draining the batch.  The decode tick keeps running over whatever
+  mix of positions the pool currently holds.
+* **Retired slots are no-ops**: an ``active: (B,)`` mask gates every cache
+  and recurrent-state update (KV writes are scattered to an out-of-bounds
+  row with mode="drop"; recurrent-state rows keep their old value), so an
+  empty slot costs only its share of the batched matmul until backfill —
+  the serving analogue of decoupled/delayed-gradient training hiding
+  latency by overlapping independent work.
+* **Bounded-staleness host view**: the engine decodes in fused multi-tick
+  chunks (`engine.ServeEngine._decode_chunk`); slot retirement (EOS /
+  budget) happens ON DEVICE inside the chunk, and the host's scheduler
+  view is refreshed only at chunk boundaries.  This is the survey's stale-
+  synchronous-parallel trade: the host tolerates a bounded lag (<= chunk
+  cap ticks) in exchange for never blocking the device on a readback —
+  syncing every tick measurably halved CPU throughput.
+
+The result: a stream of mixed-length requests sustains near-full slot
+occupancy, and total tokens/s approaches B x single-request decode speed
+instead of being gated by the slowest request in each static batch
+(`benchmarks/bench_serving.py` measures both).
+
+Public API:
+  Request / FinishedRequest  (request.py)
+  FifoScheduler / SlotPool   (scheduler.py)
+  ServeEngine                (engine.py)
+"""
+from repro.serving.engine import ServeEngine
+from repro.serving.request import FinishedRequest, Request
+from repro.serving.scheduler import FifoScheduler, SlotPool
+
+__all__ = ["Request", "FinishedRequest", "FifoScheduler", "SlotPool",
+           "ServeEngine"]

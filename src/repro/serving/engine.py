@@ -1,0 +1,280 @@
+"""ServeEngine: continuous batching over a fixed pool of cache slots.
+
+Each engine step does one of two things:
+
+  1. **Admit**: if the FIFO queue is non-empty and a slot is free, prefill
+     that one request (batch 1, its true prompt length) and scatter its
+     cache into the free slot's batch row (`model.write_cache_slot` — one
+     batch-row scatter per cache leaf, uniform across all five arch
+     families).  Nothing is read back: the first sampled token stays on
+     device and is harvested with the next chunk.
+  2. **Decode a chunk**: run k batched decode ticks over the whole pool
+     without touching the host.  The jitted tick updates the full slot
+     lifecycle on device — per-slot position vector, active-mask gated
+     cache writes, token count, EOS/budget retirement — so a slot that
+     finishes mid-chunk self-retires and its later writes are dropped.
+     One transfer at the chunk boundary harvests the (k, B) token block;
+     the host then evicts finished slots and backfills from the queue.
+
+  k is chosen as the smallest remaining budget among active slots (capped),
+  so budget retirements land exactly on chunk boundaries and a freed slot
+  is never left idle; only an early EOS can idle a slot, for at most
+  CHUNK_CAP ticks (bounded staleness of the host's view of the pool).
+
+Syncing the host every tick (the obvious implementation) halves throughput:
+the blocking read serializes dispatch, while the static baseline streams
+its whole batch without ever reading back.  Chunked harvesting keeps the
+device queue full and makes the scheduler's host work free.
+
+Greedy decoding is deterministic and slot-local, so per-request outputs are
+identical to serving the same request alone — continuous batching changes
+WHEN work runs, never WHAT each request computes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_serve_cb_step, sharded_argmax
+from repro.models import model as MD
+from repro.models.config import ModelConfig
+from repro.serving.request import FinishedRequest, Request
+from repro.serving.scheduler import FifoScheduler, SlotPool
+
+CHUNK_CAP = 8  # max decode ticks between host syncs (EOS eviction latency)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
+                 cache_len: int, chunk_cap: int = CHUNK_CAP):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.chunk_cap = chunk_cap
+        self.n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+
+        C = cache_len
+
+        def _admit_fn(params, prompt, extra, cache, tokens, pos, active,
+                      gen, maxgen, eos, slot, start_pos, max_new, eos_id):
+            """Prefill one request AND install it into its slot — cache
+            scatter + every lifecycle register — in a single dispatch.
+            Compiled once per prompt length (scalars are traced)."""
+            logits, _, req_cache = MD.forward(params, cfg, prompt,
+                                              extra_embeds=extra,
+                                              return_cache=True, cache_len=C)
+            first = sharded_argmax(logits[:, -1])  # (1,)
+            cache = MD.write_cache_slot(cache, req_cache, slot)
+            tokens = tokens.at[slot].set(first)
+            pos = pos.at[slot].set(start_pos)
+            # max_new_tokens == 1 is satisfied by the prefill token alone
+            active = active.at[slot].set(max_new > 1)
+            gen = gen.at[slot].set(1)
+            maxgen = maxgen.at[slot].set(max_new)
+            eos = eos.at[slot].set(eos_id)
+            return first[None], cache, tokens, pos, active, gen, maxgen, eos
+
+        serve_cb = make_serve_cb_step(cfg)
+
+        def _chunk_fn(k):
+            """k pool-decode ticks as ONE dispatch (lax.scan): the slot
+            lifecycle — position, token count, EOS/budget retirement —
+            advances entirely on device; the host reads back only the
+            (k, B) token/active blocks at the chunk boundary.  The tick
+            itself is the same serve_cb step the lowering plans compile
+            (steps.make_serve_cb_step); only the lifecycle is engine-side."""
+            def chunk(params, cache, tokens, pos, active, gen, maxgen, eos):
+                def body(carry, _):
+                    tokens, cache, pos, active, gen = carry
+                    nxt, cache = serve_cb(params, cache, tokens, pos, active)
+                    out = (nxt[:, 0], active)
+                    pos = pos + active
+                    gen = gen + active
+                    fin = active & ((nxt[:, 0] == eos) | (gen >= maxgen))
+                    return (nxt, cache, pos, active & ~fin, gen), out
+
+                (tokens, cache, pos, active, gen), (T, A) = jax.lax.scan(
+                    body, (tokens, cache, pos, active, gen), None, length=k)
+                return tokens, cache, pos, active, gen, T, A
+
+            return jax.jit(chunk, donate_argnums=(1,))
+
+        # jax.jit caches compilations per prompt length (shape-keyed); a
+        # production deployment would bucket prompt lengths — the smoke
+        # streams here draw from a handful of lengths
+        self._admit_jit = jax.jit(_admit_fn, donate_argnums=(3,))
+        self._chunk_fns = {}
+        self._make_chunk = _chunk_fn
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear queue/pool/stats but keep the compiled step functions —
+        lets benchmarks re-run a warmed engine without paying compile."""
+        B = self.num_slots
+        self.pool = SlotPool(B)
+        self.scheduler = FifoScheduler(self.pool)
+        self.finished: List[FinishedRequest] = []
+        self.cache = MD.init_cache(self.cfg, B, self.cache_len)
+        # device-resident slot lifecycle (host mirrors only what scheduling
+        # needs: request binding + harvested tokens)
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.pos_d = jnp.zeros((B,), jnp.int32)
+        self.active_d = jnp.zeros((B,), bool)
+        self.gen_d = jnp.zeros((B,), jnp.int32)
+        self.maxgen_d = jnp.zeros((B,), jnp.int32)
+        self.eos_d = jnp.full((B,), -1, jnp.int32)
+        # first token of each admitted request: device ref, harvested later
+        self._pending_first: Dict[int, jax.Array] = {}
+        self.ticks = 0
+        self.decode_ticks = 0
+        self.prefill_ticks = 0
+        self._occupied_slot_steps = 0  # active slots summed over decode ticks
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        plen = len(np.asarray(req.prompt))
+        budget = plen + self.n_prefix + req.max_new_tokens
+        if budget > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + prefix {self.n_prefix} "
+                f"+ gen {req.max_new_tokens} exceeds cache_len "
+                f"{self.cache_len}")
+        self.scheduler.submit(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int) -> None:
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+        start_pos = prompt.shape[1] + self.n_prefix
+        (first, self.cache, self.tokens, self.pos_d, self.active_d,
+         self.gen_d, self.maxgen_d, self.eos_d) = self._admit_jit(
+            self.params, prompt, req.extra_embeds, self.cache, self.tokens,
+            self.pos_d, self.active_d, self.gen_d, self.maxgen_d, self.eos_d,
+            jnp.int32(slot), jnp.int32(start_pos),
+            jnp.int32(req.max_new_tokens),
+            jnp.int32(-1 if req.eos_id is None else req.eos_id))
+        self.pool.occupy(slot, req, start_pos, self.ticks)
+        self._pending_first[slot] = first  # harvested with the next chunk
+        self.prefill_ticks += 1
+
+    # ------------------------------------------------------------------
+    def _finish(self, slot: int, reason: str) -> None:
+        req = self.pool.request[slot]
+        self.finished.append(FinishedRequest(
+            rid=req.rid,
+            prompt_len=len(np.asarray(req.prompt)),
+            tokens=list(self.pool.generated[slot]),
+            finish_reason=reason,
+            admitted_tick=int(self.pool.admitted_tick[slot]),
+            finished_tick=self.ticks))
+        self.pool.release(slot)
+
+    def _consume(self, slot: int, tok: int) -> None:
+        """Host mirror of the device retirement rule for one token."""
+        req = self.pool.request[slot]
+        self.pool.generated[slot].append(tok)
+        if req.eos_id is not None and tok == req.eos_id:
+            self._finish(slot, "eos")
+        elif len(self.pool.generated[slot]) >= req.max_new_tokens:
+            self._finish(slot, "length")
+
+    def _harvest_pending(self) -> None:
+        if not self._pending_first:
+            return
+        pend = sorted(self._pending_first.items())
+        self._pending_first = {}
+        for slot, ref in pend:
+            tok = int(np.asarray(ref)[0, 0])
+            self._consume(slot, tok)
+            if not self.pool.active[slot]:
+                # finished on the prefill token (EOS, or budget 1): the
+                # device never saw that token in a tick, so reconcile its
+                # active flag before the next chunk
+                self.active_d = self.active_d.at[slot].set(False)
+
+    def _device_active(self) -> List[int]:
+        """Remaining token budget of every slot the DEVICE still decodes —
+        derivable from host state alone (the host mirror replicates the
+        device retirement rule exactly at every chunk boundary)."""
+        out = []
+        for s in np.flatnonzero(self.pool.active):
+            s = int(s)
+            rem = (self.pool.request[s].max_new_tokens
+                   - len(self.pool.generated[s])
+                   - (1 if s in self._pending_first else 0))
+            if rem > 0:
+                out.append(rem)
+        return out
+
+    def _decode_chunk(self, remaining: List[int]) -> None:
+        """One fused k-tick dispatch, one host sync.  k = the largest power
+        of two <= the smallest remaining budget (so budget retirements land
+        on chunk boundaries and only a handful of chunk lengths ever
+        compile), capped at chunk_cap."""
+        m = min(min(remaining), self.chunk_cap)
+        k = 1 << (m.bit_length() - 1)
+        fn = self._chunk_fns.get(k)
+        if fn is None:
+            fn = self._chunk_fns[k] = self._make_chunk(k)
+        (self.tokens, self.cache, self.pos_d, self.active_d, self.gen_d,
+         T, A) = fn(self.params, self.cache, self.tokens, self.pos_d,
+                    self.active_d, self.gen_d, self.maxgen_d, self.eos_d)
+        self.decode_ticks += k
+        # single harvest: (k,B) token block + the per-tick active masks
+        T = np.asarray(T)
+        A = np.asarray(A)
+        self._occupied_slot_steps += int(A.sum())
+        self._harvest_pending()
+        for t in range(k):
+            for slot in np.flatnonzero(A[t]):
+                slot = int(slot)
+                if self.pool.active[slot]:
+                    self._consume(slot, int(T[t, slot]))
+
+    # ------------------------------------------------------------------
+    def tick(self) -> str:
+        """One scheduling step: admit a request, or decode a chunk of the
+        pool.  Returns "prefill" | "decode" | "idle"."""
+        admission = self.scheduler.next_admission()
+        if admission is not None:
+            self.ticks += 1
+            self._admit(*admission)
+            return "prefill"
+        if self.pool.num_active or self._pending_first:
+            self.ticks += 1
+            remaining = self._device_active()
+            if remaining:
+                self._decode_chunk(remaining)
+            else:
+                self._harvest_pending()
+            return "decode"
+        return "idle"
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> List[FinishedRequest]:
+        """Drain `requests` (plus anything already queued) to completion;
+        returns finished requests sorted by request id."""
+        for req in requests or ():
+            self.submit(req)
+        while not self.scheduler.done:
+            self.tick()
+        return sorted(self.finished, key=lambda f: f.rid)
+
+    # ------------------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode tick."""
+        if not self.decode_ticks:
+            return 0.0
+        return self._occupied_slot_steps / (self.decode_ticks *
+                                            self.num_slots)
+
+    def stats(self) -> Dict[str, float]:
+        gen_tokens = sum(len(f.tokens) for f in self.finished)
+        return {"ticks": self.ticks, "decode_ticks": self.decode_ticks,
+                "prefill_ticks": self.prefill_ticks,
+                "occupancy": self.occupancy,
+                "generated_tokens": gen_tokens}

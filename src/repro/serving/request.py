@@ -1,0 +1,33 @@
+"""Request / slot state for the continuous-batching engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    prompt: token ids (list/1-D array, length >= 1)
+    max_new_tokens: generation budget (includes the token sampled from the
+        prompt's last logit, matching the static serve path)
+    eos_id: stop token; None = run to the budget
+    extra_embeds: optional modality-frontend output for vlm/audio backbones,
+        batch dim 1: (1, P, 1024) patches or (1, T_enc, d_model) frames
+    """
+    rid: int
+    prompt: Any
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    extra_embeds: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    rid: int
+    prompt_len: int
+    tokens: List[int]          # generated ids, EOS included if hit
+    finish_reason: str         # "eos" | "length"
+    admitted_tick: int
+    finished_tick: int

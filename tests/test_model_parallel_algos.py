@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import decoupled as DD
 from repro.core.hypar import (LayerCost, brute_force, hypar_partition,
