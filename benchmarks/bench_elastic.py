@@ -1,0 +1,109 @@
+"""Elastic training under failure traces vs the failure-free baseline.
+
+For each recovery mode (sync all-reduce w/ checkpoint restore, local-SGD
+bounded-staleness continuation, EASGD center survival) this runs the
+deterministic elastic driver three ways on the same problem:
+
+  free   : no trace — the goodput / loss baseline
+  fail1  : single worker death mid-run (the acceptance scenario: goodput
+           must stay >= 0.8x failure-free, recovery latency reported)
+  churn  : death + hang-to-timeout + scale-up join + straggler slowdown
+
+Wall-clock is simulated (straggler-bound step times), so every number is
+a deterministic function of the trace.  Results go to
+benchmarks/results/elastic.json for the roofline/report tooling.
+
+  PYTHONPATH=src python benchmarks/bench_elastic.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def churn_trace(steps: int, workers: int) -> FailureTrace:
+    s = steps // 5
+    return FailureTrace([
+        TraceEvent(s, "fail", 1),
+        TraceEvent(2 * s, "hang", 2),          # dies via heartbeat timeout
+        TraceEvent(3 * s, "join", workers),     # scale-up replaces capacity
+        TraceEvent(4 * s, "slow", 3, 0.25),     # straggler -> DBS replan
+    ])
+
+
+def run_mode(mode: str, trace, *, workers, steps, batch, ckpt_every):
+    with tempfile.TemporaryDirectory() as d:
+        return run_elastic(ElasticProblem(), mode=mode, workers=workers,
+                           steps=steps, global_batch=batch, trace=trace,
+                           ckpt_dir=d, ckpt_every=ckpt_every)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=100)
+    # divisible by W and W-1: the single-failure goodput then measures the
+    # lost capacity + recovery cost, not integer-split quantization (64/7
+    # forces one survivor to 10 rows and the barrier waits on it)
+    ap.add_argument("--batch", type=int, default=56)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer steps, tighter ckpt cadence")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.steps, args.ckpt_every = 40, 5
+
+    fail_step = args.steps // 2 - 3
+    report = {"workers": args.workers, "steps": args.steps,
+              "global_batch": args.batch, "modes": {}}
+    print("mode,scenario,goodput,goodput_ratio,recovery_latency,"
+          "lost_steps,final_loss,final_workers")
+    for mode in ("sync", "local_sgd", "easgd"):
+        kw = dict(workers=args.workers, steps=args.steps, batch=args.batch,
+                  ckpt_every=args.ckpt_every)
+        free = run_mode(mode, None, **kw)
+        fail1 = run_mode(mode, FailureTrace.single_failure(fail_step, 1),
+                         **kw)
+        churn = run_mode(mode, churn_trace(args.steps, args.workers), **kw)
+        rows = {}
+        for name, res in (("free", free), ("fail1", fail1),
+                          ("churn", churn)):
+            lat = max((r.latency for r in res.recoveries), default=0.0)
+            lost = max((r.lost_steps for r in res.recoveries), default=0)
+            ratio = res.goodput / free.goodput
+            rows[name] = {
+                "goodput": res.goodput, "goodput_ratio": ratio,
+                "recovery_latency": lat, "lost_steps": lost,
+                "final_loss": res.final_loss,
+                "final_workers": len(res.final_alive),
+                "recoveries": len(res.recoveries),
+                "splits_replanned": res.splits_replanned,
+            }
+            print(f"{mode},{name},{res.goodput:.3f},{ratio:.3f},"
+                  f"{lat:.2f},{lost},{res.final_loss:.6f},"
+                  f"{len(res.final_alive)}")
+        report["modes"][mode] = rows
+
+        ratio1 = rows["fail1"]["goodput_ratio"]
+        assert ratio1 >= 0.8, (
+            f"{mode}: single-failure goodput {ratio1:.3f}x < 0.8x baseline")
+        assert rows["fail1"]["final_loss"] <= \
+            max(10 * rows["free"]["final_loss"], 5e-3), (
+            f"{mode}: failure run did not converge")
+
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "elastic.json"
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -11,11 +11,14 @@ Sections:
   pipeline   : §Pipelining — bubble fraction + GPipe equivalence (8-dev CPU)
   kernels    : Pallas kernels vs oracles + VMEM working sets
   moe_routing: global vs group-wise MoE routing costs (§Perf iteration 1)
+  serving    : continuous vs static batching on a mixed-length stream
+  elastic    : recovery latency + goodput under failure traces
   roofline   : §Roofline report from benchmarks/results/*.json
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
 import pathlib
 import subprocess
@@ -25,34 +28,29 @@ import time
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SECTIONS = ["techniques", "classic", "rl", "pipeline", "kernels",
-            "moe_routing", "roofline"]
+            "moe_routing", "serving", "elastic", "roofline"]
 
 
 def _banner(name: str) -> None:
     print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
 
 
+_MODULES = {
+    "techniques": "bench_techniques", "classic": "bench_classic",
+    "rl": "bench_rl", "kernels": "bench_kernels",
+    "moe_routing": "bench_moe_routing", "serving": "bench_serving",
+    "elastic": "bench_elastic", "roofline": "roofline",
+}
+_ARGV = {"roofline": ["--mesh", "both"]}
+
+
 def _run_inproc(name: str) -> None:
     _banner(name)
     t0 = time.time()
-    if name == "techniques":
-        from benchmarks import bench_techniques as m
-    elif name == "classic":
-        from benchmarks import bench_classic as m
-    elif name == "rl":
-        from benchmarks import bench_rl as m
-    elif name == "kernels":
-        from benchmarks import bench_kernels as m
-    elif name == "moe_routing":
-        from benchmarks import bench_moe_routing as m
-    elif name == "roofline":
-        from benchmarks import roofline as m
-        m.main(["--mesh", "both"])
-        print(f"[{name}: {time.time()-t0:.1f}s]")
-        return
-    else:
-        raise ValueError(name)
-    m.main()
+    m = importlib.import_module(f"benchmarks.{_MODULES[name]}")
+    # explicit argv: several benches parse args, and run.py's own flags
+    # (--only ...) must not leak into them via sys.argv
+    m.main(_ARGV.get(name, []))
     print(f"[{name}: {time.time()-t0:.1f}s]")
 
 

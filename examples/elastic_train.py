@@ -1,0 +1,62 @@
+"""Elastic training: surviving worker death, scale-up, and stragglers.
+
+Part 1 replays one failure trace through all three recovery policies on
+the deterministic simulation driver and prints what each one does about
+a mid-run death (checkpoint rewind vs survivor continuation vs center
+survival).  Part 2 runs REAL elastic LM training — the same trace
+machinery behind `launch/train.py --elastic` — and shows the loss
+recovering through a worker death and a straggler replan.
+
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+import json
+import pathlib
+import tempfile
+
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+from repro.launch.train import train
+
+# ---------------------------------------------------------------------------
+# 1. one trace, three recovery policies
+# ---------------------------------------------------------------------------
+trace = FailureTrace([
+    TraceEvent(step=20, kind="fail", worker=1),       # instant death
+    TraceEvent(step=35, kind="slow", worker=2, rate=0.3),  # straggler
+])
+print("trace:", [(e.step, e.kind, e.worker) for e in trace.events])
+
+problem = ElasticProblem()
+for mode in ("sync", "local_sgd", "easgd"):
+    with tempfile.TemporaryDirectory() as d:
+        free = run_elastic(problem, mode=mode, steps=60, ckpt_dir=d)
+    with tempfile.TemporaryDirectory() as d:
+        fail = run_elastic(problem, mode=mode, steps=60, ckpt_dir=d,
+                           trace=trace)
+    rec = fail.recoveries[0]
+    how = {"sync": f"ckpt rewind ({rec.lost_steps} steps lost)",
+           "local_sgd": "bounded-staleness survivor continuation",
+           "easgd": "center variable survives by construction"}[mode]
+    print(f"{mode:10s} loss {free.final_loss:.5f} -> {fail.final_loss:.5f} "
+          f"under failure | goodput {fail.goodput / free.goodput:.2f}x | "
+          f"death -> {how} | DBS replans: {fail.splits_replanned}")
+
+# ---------------------------------------------------------------------------
+# 2. the real thing: elastic LM training with a trace file
+# ---------------------------------------------------------------------------
+with tempfile.TemporaryDirectory() as d:
+    tp = pathlib.Path(d) / "trace.json"
+    tp.write_text(json.dumps([
+        {"step": 10, "kind": "fail", "worker": 1},
+        {"step": 18, "kind": "slow", "worker": 2, "rate": 0.3},
+    ]))
+    out = train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "30",
+                 "--batch", "4", "--seq", "64", "--log-every", "10",
+                 "--elastic", "--workers", "4",
+                 "--ckpt-dir", str(pathlib.Path(d) / "ckpt"),
+                 "--ckpt-every", "8", "--failure-trace", str(tp)])
+    print(f"LM training survived {len(out['recoveries'])} failure(s); "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"(floor {out['entropy_floor']:.3f}); "
+          f"final workers {out['final_alive']}")
+print("elastic_train done")

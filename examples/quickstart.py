@@ -4,6 +4,13 @@ Builds a reduced Qwen3-family model, takes a few data-parallel training
 steps on synthetic bigram data, then greedy-decodes from the trained model.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Where to go next:
+  * elastic fault-tolerant training (worker death / scale-up / stragglers
+    from a replayable trace): `examples/elastic_train.py`, or the launcher
+    `python -m repro.launch.train --elastic --failure-trace=trace.json
+    --ckpt-dir=...` (see `repro.elastic`)
+  * continuous-batching serving: `examples/serve_stream.py`
 """
 import jax
 import jax.numpy as jnp

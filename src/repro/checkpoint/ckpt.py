@@ -36,13 +36,66 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
+def _unflatten_like(abstract: Pytree, flat: Dict[str, Any]) -> Pytree:
+    """Rebuild `abstract`'s structure from a {path-key: leaf} dict
+    (inverse of `_flatten`)."""
+    order = [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(abstract)[0]]
+    treedef = jax.tree_util.tree_structure(abstract)
+    return jax.tree_util.tree_unflatten(treedef, [flat[k] for k in order])
+
+
+def _load_leaf(step_dir: pathlib.Path, key: str, manifest: Dict) -> Any:
+    """Load one leaf as saved, recast to the manifest's logical dtype
+    (bf16 etc. are stored as fp32 — see `save_checkpoint`)."""
+    arr = np.load(step_dir / f"{key}.npy")
+    return jnp.asarray(arr).astype(manifest["leaves"][key]["dtype"])
+
+
+def sweep_tmp(ckpt_dir: str) -> list:
+    """Remove orphaned ``.tmp_step_*`` dirs (left by killed runs).
+
+    Assumes the single-writer model this codebase uses everywhere (one
+    trainer owns a ckpt_dir): a tmp dir is only live inside this
+    process's own `save_checkpoint` call, which creates and renames it
+    synchronously.  Two processes saving into the same dir would sweep
+    each other's in-flight tmp dirs."""
+    base = pathlib.Path(ckpt_dir)
+    swept = []
+    if base.exists():
+        for p in base.glob(".tmp_step_*"):
+            shutil.rmtree(p)
+            swept.append(str(p))
+    return swept
+
+
+def gc_checkpoints(ckpt_dir: str, keep_last: int) -> list:
+    """Delete all but the newest `keep_last` complete checkpoints."""
+    base = pathlib.Path(ckpt_dir)
+    if keep_last <= 0 or not base.exists():
+        return []
+    steps = sorted(
+        (int(p.name.split("_")[1]), p) for p in base.glob("step_*")
+        if (p / "manifest.json").exists())
+    removed = []
+    for _, p in steps[:-keep_last]:
+        shutil.rmtree(p)
+        removed.append(str(p))
+    return removed
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
-                    metadata: Optional[Dict] = None) -> str:
+                    metadata: Optional[Dict] = None,
+                    keep_last: int = 0) -> str:
+    """keep_last > 0 enables retention: after a successful save, only the
+    newest `keep_last` checkpoints survive.  Every save also sweeps
+    orphaned tmp dirs from killed runs (any step, not just this one)."""
     base = pathlib.Path(ckpt_dir)
     final = base / f"step_{step:08d}"
     tmp = base / f".tmp_step_{step:08d}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    base.mkdir(parents=True, exist_ok=True)
+    sweep_tmp(ckpt_dir)
     tmp.mkdir(parents=True)
     flat = _flatten(tree)
     manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
@@ -60,6 +113,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if keep_last:
+        gc_checkpoints(ckpt_dir, keep_last)
     return str(final)
 
 
@@ -97,11 +152,4 @@ def restore_checkpoint(ckpt_dir: str, abstract_tree: Pytree,
         arr = jnp.asarray(arr, dtype=want.dtype)  # jnp handles bf16 etc.
         out[key] = (jax.device_put(arr, flat_sh[key]) if key in flat_sh
                     else jax.device_put(arr))
-    # unflatten back into the abstract structure
-    leaves_order = [
-        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        for path, _ in jax.tree_util.tree_flatten_with_path(abstract_tree)[0]]
-    treedef = jax.tree_util.tree_structure(abstract_tree)
-    tree = jax.tree_util.tree_unflatten(
-        treedef, [out[k] for k in leaves_order])
-    return tree, manifest["metadata"]
+    return _unflatten_like(abstract_tree, out), manifest["metadata"]

@@ -1,0 +1,33 @@
+"""Elastic fault-tolerant training: membership, resharding, recovery.
+
+The survey's closing challenges — fault tolerance, stragglers, the cost of
+lockstep — as a deterministic subsystem: replayable failure traces drive a
+membership state machine, a resharding engine remaps worker-stacked state
+W -> W', and per-mode recovery policies keep training converging through
+worker death, scale-up, and slowdown.  See `repro.elastic.driver` for the
+two run loops (simulation + real LM training).
+"""
+from repro.elastic.membership import (FailureTrace, Membership, TraceEvent,
+                                      Transition)
+from repro.elastic.reshard import (assign_shards, plan_split,
+                                   reshard_stacked, restore_stacked,
+                                   save_stacked, take_rows)
+from repro.elastic.recovery import (BoundedStalenessContinuation,
+                                    EASGDCenterSurvival,
+                                    SyncCheckpointRestore)
+from repro.elastic.straggler import (ThroughputMonitor, replan_on_straggle,
+                                     step_time)
+from repro.elastic.driver import (ElasticProblem, ElasticRunResult,
+                                  RecoveryRecord, elastic_lm_loop,
+                                  run_elastic)
+
+__all__ = [
+    "FailureTrace", "Membership", "TraceEvent", "Transition",
+    "assign_shards", "plan_split", "reshard_stacked", "restore_stacked",
+    "save_stacked", "take_rows",
+    "BoundedStalenessContinuation", "EASGDCenterSurvival",
+    "SyncCheckpointRestore",
+    "ThroughputMonitor", "replan_on_straggle", "step_time",
+    "ElasticProblem", "ElasticRunResult", "RecoveryRecord",
+    "elastic_lm_loop", "run_elastic",
+]

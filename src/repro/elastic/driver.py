@@ -1,0 +1,411 @@
+"""Elastic run loops: deterministic fault-injection driver + LM trainer.
+
+Two entry points share the same membership / reshard / recovery machinery:
+
+* `run_elastic` — a fully deterministic simulation on a controlled
+  least-squares problem (same family as `benchmarks/bench_techniques.py`).
+  Wall-clock is *simulated*: each synchronous round costs the straggler
+  bound max_i(rows_i / rate_i), so goodput and recovery latency are exact
+  functions of the trace, not of host noise.  This is what
+  `tests/test_elastic.py` and `benchmarks/bench_elastic.py` drive.
+
+* `elastic_lm_loop` — the real training path behind
+  `launch/train.py --elastic --failure-trace=...`: logical data-parallel
+  workers feed disjoint pipeline shards into the jitted train step,
+  periodic checkpoints bound the blast radius, and a trace-injected death
+  restores + rewinds exactly like the simulation's sync policy.
+
+Time model: the membership machine advances on monotonically increasing
+*wall steps*; the trainer's *progress step* rewinds on restore.  Recovery
+latency for a failure is (simulated) time from the death transition until
+progress regains its pre-death step — restore penalty plus redone work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import data_parallel as DP
+from repro.elastic.membership import FailureTrace, Membership, Transition
+from repro.elastic.recovery import (BoundedStalenessContinuation,
+                                    EASGDCenterSurvival,
+                                    SyncCheckpointRestore)
+from repro.elastic.reshard import save_stacked
+from repro.elastic.straggler import (ThroughputMonitor, replan_on_straggle,
+                                     step_time)
+from repro.optim.optimizers import sgd_momentum
+
+Pytree = Any
+
+MODES = ("sync", "local_sgd", "easgd")
+
+
+# ---------------------------------------------------------------------------
+# The controlled problem (deterministic, known optimum)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ElasticProblem:
+    """Least squares with per-row weights so ragged DBS splits can ride a
+    rectangular (W, n_max) stack: padding rows carry weight 0."""
+    dim: int = 16
+    ndata: int = 512
+    noise: float = 0.01
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.w_true = rng.standard_normal(self.dim).astype(np.float32)
+        self.X = rng.standard_normal((self.ndata, self.dim)).astype(np.float32)
+        self.y = (self.X @ self.w_true +
+                  self.noise * rng.standard_normal(self.ndata)
+                  ).astype(np.float32)
+
+    def init_params(self) -> Pytree:
+        return {"w": jnp.zeros((self.dim,), jnp.float32)}
+
+    @staticmethod
+    def loss_fn(params, batch):
+        err = batch["x"] @ params["w"] - batch["y"]
+        wt = batch["m"]
+        return jnp.sum(wt * err ** 2) / jnp.maximum(jnp.sum(wt), 1.0)
+
+    def full_loss(self, params) -> float:
+        batch = {"x": jnp.asarray(self.X), "y": jnp.asarray(self.y),
+                 "m": jnp.ones((self.ndata,), jnp.float32)}
+        return float(self.loss_fn(params, batch))
+
+    def sample(self, worker: int, step: int, n: int, n_max: int
+               ) -> Dict[str, np.ndarray]:
+        """Deterministic (worker, step)-keyed batch, padded to n_max."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, worker, step]))
+        idx = rng.integers(0, self.ndata, n)
+        x = np.zeros((n_max, self.dim), np.float32)
+        y = np.zeros((n_max,), np.float32)
+        m = np.zeros((n_max,), np.float32)
+        x[:n], y[:n], m[:n] = self.X[idx], self.y[idx], 1.0
+        return {"x": x, "y": y, "m": m}
+
+    def stack(self, ids: Sequence[int], step: int,
+              split: Dict[int, int], K: int = 0) -> Dict[str, np.ndarray]:
+        """Stacked batches: (W, n_max, ...) or (W, K, n, ...) when K>0."""
+        if K:
+            n = max(split[w] for w in ids)
+            per_w = []
+            for w in ids:
+                ks = [self.sample(w, step * K + k, n, n) for k in range(K)]
+                per_w.append({key: np.stack([b[key] for b in ks])
+                              for key in ks[0]})
+        else:
+            n_max = max(split[w] for w in ids)
+            per_w = [self.sample(w, step, split[w], n_max) for w in ids]
+        return {key: np.stack([p[key] for p in per_w]) for key in per_w[0]}
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RecoveryRecord:
+    wall_step: int
+    worker: int
+    cause: str             # "fail" | "timeout"
+    lost_steps: int        # progress rewound (sync) or 0 (continuation)
+    latency: float = 0.0   # sim time from death to regained progress
+
+
+@dataclasses.dataclass
+class ElasticRunResult:
+    mode: str
+    losses: List[float]
+    final_loss: float
+    steps: int
+    sim_time: float
+    samples: int
+    recoveries: List[RecoveryRecord]
+    transitions: List[Transition]
+    final_alive: Tuple[int, ...]
+    splits_replanned: int = 0
+
+    @property
+    def goodput(self) -> float:
+        return self.samples / max(self.sim_time, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# The simulation driver
+# ---------------------------------------------------------------------------
+def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
+                workers: int = 4, steps: int = 120, global_batch: int = 64,
+                trace: Optional[FailureTrace] = None, lr: float = 0.05,
+                K: int = 4, ckpt_dir: Optional[str] = None,
+                ckpt_every: int = 10, keep_last: int = 3,
+                heartbeat_timeout: int = 3, restore_penalty: float = 2.0,
+                straggle_threshold: float = 0.5,
+                easgd_rho: float = 0.5) -> ElasticRunResult:
+    """Run `steps` elastic training rounds under a failure trace.
+
+    restore_penalty: simulated restore cost, in units of one nominal
+    (failure-free, uniform-split) step time.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    if mode == "sync" and ckpt_dir is None:
+        raise ValueError("sync mode needs ckpt_dir for recovery")
+
+    membership = Membership(workers, trace or FailureTrace(),
+                            heartbeat_timeout=heartbeat_timeout)
+    monitor = ThroughputMonitor()
+    opt = sgd_momentum(lambda s: lr, momentum=0.0)
+    loss_fn = problem.loss_fn
+    nominal_t = global_batch / workers  # one uniform worker's step work
+
+    # ---- per-mode state -------------------------------------------------
+    ids = list(membership.alive())
+    if mode == "sync":
+        params = problem.init_params()
+        opt_state = opt.init(params)
+        policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last)
+        policy.checkpoint(0, params, opt_state)
+    else:
+        p0 = problem.init_params()
+        params_w = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (workers,) + p.shape), p0)
+        if mode == "local_sgd":
+            opt_w = jax.vmap(opt.init)(params_w)
+            policy = BoundedStalenessContinuation()
+        else:
+            center = p0
+            policy = EASGDCenterSurvival()
+            easgd_cfg = DP.EASGDConfig(lr=lr, rho=easgd_rho)
+
+    losses: Dict[int, float] = {}
+    recoveries: List[RecoveryRecord] = []
+    all_transitions: List[Transition] = []
+    pending: List[Tuple[RecoveryRecord, int, float]] = []  # (rec, goal, t0)
+    sim_time = 0.0
+    samples_done = 0  # useful rows: redone (post-restore) work not re-counted
+    replans = 0
+    train_step = 0
+    wall = 0
+
+    while train_step < steps:
+        transitions = membership.advance(wall)
+        all_transitions.extend(transitions)
+        deaths = [t for t in transitions if t.kind == "death"]
+        joins = [t for t in transitions if t.kind == "join"]
+        for t in transitions:
+            if t.kind == "rate":
+                # telemetry: the slow worker's observed samples/sec drops
+                monitor.observe(t.worker, nominal_t, nominal_t / t.rate)
+        for t in deaths:
+            monitor.forget(t.worker)
+
+        new_ids = list(membership.alive())
+        if not new_ids:
+            raise RuntimeError(f"wall step {wall}: all workers dead")
+
+        if deaths or joins:
+            if mode == "sync":
+                if deaths:  # the in-flight collective died: restore+rewind
+                    params, opt_state, restored = policy.recover(
+                        params, opt_state)
+                    lost = train_step - restored
+                    pause = restore_penalty * nominal_t
+                    sim_time += pause
+                    for d in deaths:
+                        rec = RecoveryRecord(wall, d.worker, d.cause, lost)
+                        recoveries.append(rec)
+                        pending.append((rec, train_step, sim_time - pause))
+                    train_step = restored
+            elif mode == "local_sgd":
+                st = policy.apply({"params": params_w, "opt": opt_w},
+                                  ids, new_ids)
+                params_w, opt_w = st["params"], st["opt"]
+                for d in deaths:
+                    recoveries.append(
+                        RecoveryRecord(wall, d.worker, d.cause, 0))
+            else:  # easgd
+                params_w, center = policy.apply(params_w, center,
+                                                ids, new_ids)
+                for d in deaths:
+                    recoveries.append(
+                        RecoveryRecord(wall, d.worker, d.cause, 0))
+        ids = new_ids
+
+        rates = membership.rates()
+
+        # ---- one training round ----------------------------------------
+        if mode == "sync":
+            # straggler mitigation: DBS split only on the sync barrier
+            # (local rounds keep uniform work; see ROADMAP open items)
+            split, slow = replan_on_straggle(
+                monitor, ids, global_batch, threshold=straggle_threshold)
+            if slow:
+                replans += 1
+            batch = problem.stack(ids, train_step, split)
+            batches_w = {k: jnp.asarray(v) for k, v in batch.items()}
+            losses_w, grads_w = DP.per_worker_grads(
+                loss_fn, params, batches_w)
+            wts = jnp.asarray([split[w] for w in ids], jnp.float32)
+            wts = wts / jnp.sum(wts)
+            g = jax.tree_util.tree_map(
+                lambda gw: jnp.tensordot(wts, gw.astype(jnp.float32), 1),
+                grads_w)
+            params, opt_state = opt.update(g, opt_state, params)
+            losses[train_step] = float(jnp.dot(wts, losses_w))
+            sim_time += step_time(split, rates)
+            if ckpt_every and (train_step + 1) % ckpt_every == 0:
+                policy.checkpoint(train_step + 1, params, opt_state)
+        else:
+            # rounded (not floored) so a death doesn't step the per-worker
+            # allocation and conflate quantization with failure cost
+            n = max(1, round(global_batch / (len(ids) * K)))
+            uniform = {w: n for w in ids}
+            samples_done += len(ids) * K * n
+            batch = problem.stack(ids, train_step, uniform, K=K)
+            batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
+            if mode == "local_sgd":
+                params_w, opt_w, m = DP.local_sgd_round(
+                    loss_fn, params_w, opt, opt_w, batches_wk)
+            else:
+                params_w, center, m = DP.easgd_round(
+                    loss_fn, params_w, center, batches_wk, easgd_cfg)
+            losses[train_step] = float(m["loss"])
+            sim_time += step_time({w: uniform[w] * K for w in ids}, rates)
+            if ckpt_dir and ckpt_every and (train_step + 1) % ckpt_every == 0:
+                stacked = ({"params": params_w, "opt": opt_w}
+                           if mode == "local_sgd" else {"params": params_w})
+                rep = None if mode == "local_sgd" else {"center": center}
+                save_stacked(ckpt_dir, train_step + 1, stacked, ids,
+                             replicated=rep, keep_last=keep_last)
+
+        train_step += 1
+        wall += 1
+
+        # close out recovery latency once progress is regained
+        still = []
+        for rec, goal, t0 in pending:
+            if train_step >= goal:
+                rec.latency = sim_time - t0
+            else:
+                still.append((rec, goal, t0))
+        pending = still
+
+    for rec, goal, t0 in pending:  # run ended before regaining progress
+        rec.latency = sim_time - t0
+
+    if mode == "sync":
+        final_params = params
+    elif mode == "local_sgd":
+        final_params = jax.tree_util.tree_map(
+            lambda p: jnp.mean(p.astype(jnp.float32), 0), params_w)
+    else:
+        final_params = center
+    loss_curve = [losses[s] for s in sorted(losses)]
+    # sync: each progress step delivers exactly global_batch useful rows
+    # (redone post-restore work is not useful and not re-counted); local
+    # modes: rows actually processed (no rewind, so all work is useful)
+    samples = steps * global_batch if mode == "sync" else samples_done
+    return ElasticRunResult(
+        mode=mode, losses=loss_curve,
+        final_loss=problem.full_loss(final_params), steps=steps,
+        sim_time=sim_time, samples=samples,
+        recoveries=recoveries, transitions=all_transitions,
+        final_alive=tuple(ids), splits_replanned=replans)
+
+
+# ---------------------------------------------------------------------------
+# The real LM training loop (launch/train.py --elastic)
+# ---------------------------------------------------------------------------
+def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
+                    batch_abs, pipe_factory: Callable[[int, int], Any],
+                    step0: int = 0) -> Dict[str, Any]:
+    """Elastic synchronous LM training over logical data-parallel workers.
+
+    Each logical worker owns a disjoint pipeline shard; every step the
+    global batch (args.batch rows) is assembled from per-worker slices
+    sized by the current (possibly DBS-replanned) split.  Deaths restore
+    the last checkpoint and rewind; joins just widen the split.
+    """
+    trace = (FailureTrace.load(args.failure_trace)
+             if args.failure_trace else FailureTrace())
+    W0 = args.workers
+    membership = Membership(W0, trace)
+    monitor = ThroughputMonitor()
+    policy = SyncCheckpointRestore(args.ckpt_dir,
+                                   keep_last=args.keep_last)
+    ckpt_every = args.ckpt_every or 20
+    policy.checkpoint(step0, params, opt_state, {"arch": args.arch})
+
+    # worker id -> pipeline; ids from scale-ups get fresh shards lazily
+    max_shards = W0 + 16
+    pipes = {w: pipe_factory(w, max_shards) for w in range(W0)}
+    iters = {w: iter(p) for w, p in pipes.items()}
+
+    def rows_from(wid: int, n: int) -> Dict[str, np.ndarray]:
+        if wid not in iters:
+            pipes[wid] = pipe_factory(wid % max_shards, max_shards)
+            iters[wid] = iter(pipes[wid])
+        b = next(iters[wid])
+        return {k: v[:n] for k, v in b.items()}
+
+    losses: Dict[int, float] = {}
+    recoveries: List[RecoveryRecord] = []
+    train_step, wall = step0, 0
+
+    while train_step < step0 + args.steps:
+        transitions = membership.advance(wall)
+        deaths = [t for t in transitions if t.kind == "death"]
+        for t in transitions:
+            if t.kind == "rate":
+                monitor.observe(t.worker, 1.0, 1.0 / t.rate)
+        for t in deaths:
+            monitor.forget(t.worker)
+        if deaths:
+            params, opt_state, restored = policy.recover(params, opt_state)
+            lost = train_step - restored
+            for d in deaths:
+                recoveries.append(
+                    RecoveryRecord(wall, d.worker, d.cause, lost))
+            print(f"[elastic] wall {wall}: worker(s) "
+                  f"{[d.worker for d in deaths]} died ({deaths[0].cause}); "
+                  f"restored step {restored} (lost {lost} steps), "
+                  f"{len(membership.alive())} survivors", flush=True)
+            train_step = restored
+
+        alive = membership.alive()
+        if not alive:
+            raise RuntimeError(f"wall step {wall}: all workers dead")
+        split, slow = replan_on_straggle(monitor, alive, args.batch)
+        if slow and wall % args.log_every == 0:
+            print(f"[elastic] stragglers {list(slow)}; split "
+                  f"{[split[w] for w in alive]}", flush=True)
+
+        parts = [rows_from(w, split[w]) for w in alive if split[w] > 0]
+        batch = {k: np.concatenate([p[k] for p in parts], axis=0)
+                 for k in parts[0]}
+        dev_batch = {k: jax.device_put(v, bshard[k])
+                     for k, v in batch.items()}
+        if cfg.arch_type in ("vlm", "audio"):
+            ee = batch_abs["extra_embeds"]
+            dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
+        params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
+        losses[train_step] = float(metrics["loss"])
+        if train_step % args.log_every == 0:
+            print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
+                  f"workers {len(alive)}", flush=True)
+        train_step += 1
+        wall += 1
+        if train_step % ckpt_every == 0:
+            policy.checkpoint(train_step, params, opt_state,
+                              {"arch": args.arch})
+
+    policy.checkpoint(train_step, params, opt_state, {"arch": args.arch})
+    return {"losses": [losses[s] for s in sorted(losses)],
+            "recoveries": recoveries, "params": params,
+            "opt_state": opt_state, "final_alive": membership.alive()}

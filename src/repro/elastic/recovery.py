@@ -1,0 +1,110 @@
+"""Per-mode recovery policies: what happens to training state when the
+membership changes.
+
+The right recovery depends on how the data-parallel mode distributes
+state (core/data_parallel.py):
+
+* **Sync all-reduce** (`SyncCheckpointRestore`) — params/optimizer are
+  replicated, but a mid-step death kills the collective: the global step
+  in flight cannot complete, and there is no per-worker replica to fall
+  back on.  Recovery restores the last checkpoint, rewinds the step
+  counter, and re-plans the batch split over the survivors.  Convergence
+  after failure is trivially the failure-free trajectory restarted a few
+  steps back; the cost is the lost steps (bounded by the checkpoint
+  cadence) — exactly what `bench_elastic.py` measures as recovery latency.
+
+* **Local SGD / parameter server** (`BoundedStalenessContinuation`) —
+  every worker owns a full (params, optimizer) replica stacked on the
+  leading W axis.  A death simply drops that row: the survivors' replicas
+  are each a valid model, and the next averaging round re-synchronises
+  them, so training continues with no rewind (the bounded-staleness
+  argument of SSP: losing one worker's K unsynced local steps perturbs
+  the average by at most the staleness bound).  A joiner starts at the
+  survivor mean — the consensus point — so it cannot drag the average
+  away from the optimum.
+
+* **EASGD** (`EASGDCenterSurvival`) — the center variable x~ *is* the
+  model and lives outside any worker, so worker death loses only one
+  elastic replica: the center survives by construction.  A joiner clones
+  the center (zero elastic force at birth: x_i - x~ = 0), which keeps the
+  center update sum_i(x_i - x~) unbiased across membership changes.
+
+All three are validated for convergence-after-failure in
+`tests/test_elastic.py` (final loss within tolerance of the failure-free
+run under the same trace-free data stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.elastic.reshard import reshard_stacked
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class SyncCheckpointRestore:
+    """Checkpoint/restore recovery for the synchronous all-reduce mode."""
+    ckpt_dir: str
+    keep_last: int = 3
+    saved_step: int = -1
+
+    def checkpoint(self, step: int, params: Pytree, opt_state: Pytree,
+                   metadata: Optional[Dict] = None) -> str:
+        meta = dict(metadata or {})
+        meta["step"] = step
+        path = save_checkpoint(self.ckpt_dir, step,
+                               {"params": params, "opt": opt_state},
+                               meta, keep_last=self.keep_last)
+        self.saved_step = step
+        return path
+
+    def recover(self, params: Pytree, opt_state: Pytree
+                ) -> Tuple[Pytree, Pytree, int]:
+        """Restore the latest checkpoint; the live (possibly torn) state is
+        passed only as an abstract template.  Returns (params, opt, step)."""
+        abs_tree = jax.eval_shape(
+            lambda: {"params": params, "opt": opt_state})
+        tree, meta = restore_checkpoint(self.ckpt_dir, abs_tree)
+        return tree["params"], tree["opt"], int(meta["step"])
+
+
+@dataclasses.dataclass
+class BoundedStalenessContinuation:
+    """Survivor continuation for local-SGD / parameter-server replicas.
+
+    join_init: how a joiner's row is built ("mean" of survivors is the
+    consensus point; "donor" clones the lowest-id survivor)."""
+    join_init: str = "mean"
+
+    def apply(self, stacked: Dict[str, Pytree], old_ids: Sequence[int],
+              new_ids: Sequence[int]) -> Dict[str, Pytree]:
+        """stacked: dict of (W, ...)-stacked pytrees (e.g. params_w, opt_w),
+        all resharded with the same row mapping."""
+        return {k: reshard_stacked(v, old_ids, new_ids, init=self.join_init)
+                for k, v in stacked.items()}
+
+
+@dataclasses.dataclass
+class EASGDCenterSurvival:
+    """EASGD recovery: the center survives; replicas churn around it."""
+
+    def apply(self, params_w: Pytree, center: Pytree,
+              old_ids: Sequence[int], new_ids: Sequence[int]
+              ) -> Tuple[Pytree, Pytree]:
+        old_index = {wid: i for i, wid in enumerate(old_ids)}
+        survivors = [w for w in new_ids if w in old_index]
+        if not survivors and not new_ids:
+            raise ValueError("empty membership")
+
+        def remap(p_w, c):
+            rows = [p_w[old_index[w]] if w in old_index else c
+                    for w in new_ids]
+            return jnp.stack(rows, axis=0)
+
+        return jax.tree_util.tree_map(remap, params_w, center), center

@@ -1,0 +1,80 @@
+"""Straggler detection + mitigation.
+
+Synchronous data parallelism runs at the speed of its slowest worker (the
+survey's straggler cost; `dbs_epoch_time`).  Mitigation here is the DBS
+move (ref 71): keep an EMA of each worker's observed throughput, flag
+workers that fall below a fraction of the cluster median, and re-plan the
+global batch split proportionally to throughput so the slow worker gets
+less work and the barrier arrives sooner.
+
+The monitor consumes (worker, samples, seconds) observations — in the
+simulated driver these come from the trace's `slow` events; on a real
+cluster they would come from per-host step timers.  Everything downstream
+(`plan_split` -> `dbs_partition`) is identical either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.elastic.reshard import plan_split
+
+
+@dataclasses.dataclass
+class ThroughputMonitor:
+    """EMA throughput per worker, in samples/sec relative units."""
+    decay: float = 0.5
+    nominal: float = 1.0
+    ema: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def observe(self, worker: int, samples: float, seconds: float) -> None:
+        rate = samples / max(seconds, 1e-9)
+        prev = self.ema.get(worker)
+        self.ema[worker] = rate if prev is None else \
+            self.decay * prev + (1 - self.decay) * rate
+
+    def forget(self, worker: int) -> None:
+        self.ema.pop(worker, None)
+
+    def rates(self, alive_ids: Sequence[int]) -> Dict[int, float]:
+        """Unobserved workers (fresh joiners) are assumed nominal."""
+        return {w: self.ema.get(w, self.nominal) for w in alive_ids}
+
+    def stragglers(self, alive_ids: Sequence[int],
+                   threshold: float = 0.5) -> Tuple[int, ...]:
+        """Workers below `threshold` x median throughput."""
+        rates = self.rates(alive_ids)
+        if not rates:
+            return ()
+        med = float(np.median(list(rates.values())))
+        return tuple(sorted(w for w, r in rates.items()
+                            if r < threshold * med))
+
+
+def replan_on_straggle(monitor: ThroughputMonitor,
+                       alive_ids: Sequence[int], global_batch: int,
+                       *, threshold: float = 0.5, multiple: int = 1
+                       ) -> Tuple[Dict[int, int], Tuple[int, ...]]:
+    """Batch split for the current membership: uniform while nobody lags,
+    throughput-proportional (DBS) once the monitor flags a straggler.
+
+    Uniform-by-default keeps the failure-free path byte-identical to the
+    non-elastic trainer; the DBS split only kicks in on real telemetry.
+    """
+    slow = monitor.stragglers(alive_ids, threshold)
+    if not slow:
+        flat = {w: 1.0 for w in alive_ids}
+        return plan_split(global_batch, flat, multiple), ()
+    return plan_split(global_batch, monitor.rates(alive_ids), multiple), slow
+
+
+def step_time(split: Dict[int, int], rates: Dict[int, float],
+              overhead: float = 0.0) -> float:
+    """Simulated synchronous step latency: the straggler bound
+    max_i(rows_i / rate_i) plus a fixed barrier overhead."""
+    if not split:
+        return overhead
+    return overhead + max(
+        split[w] / max(rates.get(w, 1.0), 1e-9) for w in split)

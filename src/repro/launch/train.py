@@ -62,7 +62,20 @@ def train(argv=None) -> dict:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true",
                     help="natural compression on gradients (survey ref 75)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic training: survive worker death/join/"
+                         "slowdown from a failure trace (repro.elastic)")
+    ap.add_argument("--failure-trace", default=None,
+                    help="JSON trace of fail/hang/join/slow events "
+                         "(repro.elastic.membership.FailureTrace)")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="logical data-parallel workers for --elastic")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint retention for --elastic")
     args = ap.parse_args(argv)
+    if args.elastic and not args.ckpt_dir:
+        ap.error("--elastic requires --ckpt-dir (sync recovery restores "
+                 "from the last checkpoint)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     # keep params fp32 on CPU for small-scale training stability
@@ -104,6 +117,21 @@ def train(argv=None) -> dict:
         pipe = make_pipeline(cfg.vocab_size, args.batch, args.seq,
                              seed=args.seed)
         entropy_floor = pipe.source.entropy_nats
+
+        if args.elastic:
+            from repro.elastic import elastic_lm_loop
+            out = elastic_lm_loop(
+                args=args, cfg=cfg, step_fn=step_fn, params=params,
+                opt_state=opt_state, bshard=bshard, batch_abs=batch_abs,
+                pipe_factory=lambda shard, num: make_pipeline(
+                    cfg.vocab_size, args.batch, args.seq,
+                    shard_id=shard, num_shards=num, seed=args.seed),
+                step0=step0)
+            return {"losses": out["losses"],
+                    "entropy_floor": entropy_floor,
+                    "params": out["params"],
+                    "recoveries": out["recoveries"],
+                    "final_alive": out["final_alive"]}
 
         losses = []
         t0 = time.time()

@@ -1,0 +1,313 @@
+"""Elastic fault-tolerant training (repro.elastic).
+
+Covers: deterministic membership replay, W->W' resharding bit-exactness,
+checkpoint save->restore across changed worker counts (incl. optimizer
+state), checkpoint retention GC, convergence-after-failure for all three
+recovery policies, straggler-aware DBS replanning, and the elastic LM
+launcher path.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (gc_checkpoints, latest_step, save_checkpoint,
+                              restore_checkpoint, sweep_tmp)
+from repro.elastic import (ElasticProblem, FailureTrace, Membership,
+                           ThroughputMonitor, TraceEvent, plan_split,
+                           replan_on_straggle, reshard_stacked,
+                           restore_stacked, run_elastic, save_stacked,
+                           step_time)
+from repro.optim.optimizers import adamw, sgd_momentum
+
+
+# ---------------------------------------------------------------------------
+# membership: traces replay to exact transition sequences
+# ---------------------------------------------------------------------------
+def test_membership_trace_replay_is_deterministic():
+    trace = FailureTrace([
+        TraceEvent(3, "fail", 0),
+        TraceEvent(5, "hang", 1),
+        TraceEvent(10, "join", 7),
+        TraceEvent(12, "slow", 2, 0.25),
+    ])
+    m = Membership(4, trace, heartbeat_timeout=3)
+    log = [(t, tr.kind, tr.worker, tr.cause)
+           for t in range(15) for tr in m.advance(t)]
+    assert (3, "death", 0, "fail") in log
+    # hang at 5: last heartbeat was step 4, silent >= 3 at step 7
+    assert (7, "death", 1, "timeout") in log
+    assert (10, "join", 7, "") in log
+    assert m.alive() == (2, 3, 7)
+    assert m.rates()[2] == 0.25
+    # replaying the same trace gives the identical log
+    m2 = Membership(4, trace, heartbeat_timeout=3)
+    log2 = [(t, tr.kind, tr.worker, tr.cause)
+            for t in range(15) for tr in m2.advance(t)]
+    assert log == log2
+
+
+def test_membership_suspect_then_recover():
+    trace = FailureTrace([TraceEvent(4, "hang", 1),
+                          TraceEvent(6, "recover", 1)])
+    m = Membership(2, trace, heartbeat_timeout=5)
+    for t in range(5):
+        m.advance(t)
+    assert m.workers[1].status == "suspect"  # silent but not yet dead
+    for t in range(5, 8):
+        m.advance(t)
+    assert m.workers[1].status == "alive"    # false positive cleared
+    assert m.alive() == (0, 1)
+
+
+def test_membership_death_is_final_and_generation_bumps():
+    trace = FailureTrace([TraceEvent(2, "fail", 0),
+                          TraceEvent(3, "recover", 0),
+                          TraceEvent(4, "join", 9)])
+    m = Membership(3, trace)
+    g0 = m.generation
+    for t in range(6):
+        m.advance(t)
+    assert m.workers[0].status == "dead"     # recover can't resurrect
+    assert m.alive() == (1, 2, 9)
+    assert m.generation == g0 + 2            # one death + one join
+
+
+def test_trace_json_round_trip(tmp_path):
+    trace = FailureTrace([TraceEvent(5, "fail", 1),
+                          TraceEvent(9, "slow", 2, 0.5)])
+    p = tmp_path / "trace.json"
+    trace.save(str(p))
+    again = FailureTrace.load(str(p))
+    assert again.events == trace.events
+
+
+# ---------------------------------------------------------------------------
+# resharding: survivor rows are bit-exact through W -> W' -> W
+# ---------------------------------------------------------------------------
+def _stacked_state(W, dim=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    p_w = {"w": jax.random.normal(key, (W, dim)),
+           "b": jax.random.normal(jax.random.fold_in(key, 1), (W,))}
+    opt = sgd_momentum(lambda s: 0.1)
+    opt_w = jax.vmap(opt.init)(p_w)
+    # make moments non-trivial so bit-exactness is meaningful
+    opt_w = jax.tree_util.tree_map(
+        lambda l: l + jnp.arange(l.shape[0], dtype=l.dtype).reshape(
+            (l.shape[0],) + (1,) * (l.ndim - 1)), opt_w)
+    return p_w, opt_w
+
+
+def test_reshard_shrink_then_grow_round_trips_bit_exactly():
+    W = 5
+    p_w, opt_w = _stacked_state(W)
+    old_ids = [0, 1, 2, 3, 4]
+    new_ids = [0, 2, 4]                      # workers 1 and 3 die
+    p_small = reshard_stacked(p_w, old_ids, new_ids)
+    o_small = reshard_stacked(opt_w, old_ids, new_ids)
+    # survivors carried bit-exactly
+    for a, b in zip(jax.tree_util.tree_leaves(p_small),
+                    jax.tree_util.tree_leaves(p_w)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[[0, 2, 4]])
+    # grow back to the survivor set only: rows must be byte-identical
+    p_back = reshard_stacked(p_small, new_ids, new_ids)
+    for a, b in zip(jax.tree_util.tree_leaves(p_back),
+                    jax.tree_util.tree_leaves(p_small)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # optimizer-state leaves too (mu has the same row mapping)
+    for a, b in zip(jax.tree_util.tree_leaves(o_small),
+                    jax.tree_util.tree_leaves(opt_w)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[[0, 2, 4]])
+
+
+def test_reshard_join_inits_from_survivor_mean():
+    p_w = {"w": jnp.asarray([[2.0, 4.0], [6.0, 8.0]])}
+    out = reshard_stacked(p_w, [0, 1], [0, 1, 7], init="mean")
+    np.testing.assert_allclose(np.asarray(out["w"][2]), [4.0, 6.0])
+    out = reshard_stacked(p_w, [0, 1], [0, 1, 7], init="donor", donor=1)
+    np.testing.assert_array_equal(np.asarray(out["w"][2]),
+                                  np.asarray(p_w["w"][1]))
+
+
+def test_reshard_requires_a_survivor():
+    p_w = {"w": jnp.ones((2, 3))}
+    with pytest.raises(ValueError, match="surviv"):
+        reshard_stacked(p_w, [0, 1], [5, 6])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip across a changed worker count (W -> W')
+# ---------------------------------------------------------------------------
+def test_stacked_checkpoint_restore_across_worker_counts(tmp_path):
+    W, dim = 4, 6
+    p_w, _ = _stacked_state(W, dim)
+    opt = adamw(lambda s: 1e-3)
+    opt_w = jax.vmap(opt.init)(p_w)
+    # run a real update so mu/nu moments are non-zero
+    g_w = jax.tree_util.tree_map(jnp.ones_like, p_w)
+    p_w, opt_w = jax.vmap(opt.update)(g_w, opt_w, p_w)
+
+    ids = [0, 1, 2, 3]
+    save_stacked(str(tmp_path), 7, {"params": p_w, "opt": opt_w}, ids)
+
+    row_abs = jax.eval_shape(
+        lambda: jax.tree_util.tree_map(lambda l: l[0],
+                                       {"params": p_w, "opt": opt_w}))
+    # shrink: W=4 -> W'=3 (worker 2 died)
+    new_ids = [0, 1, 3]
+    tree, _, meta = restore_stacked(str(tmp_path), row_abs, new_ids)
+    assert meta["worker_ids"] == ids
+    for a, b in zip(jax.tree_util.tree_leaves(tree["params"]),
+                    jax.tree_util.tree_leaves(p_w)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[[0, 1, 3]])
+    # optimizer-state leaves (mu, nu, step) round-trip bit-exactly too
+    for a, b in zip(jax.tree_util.tree_leaves(tree["opt"]),
+                    jax.tree_util.tree_leaves(opt_w)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b)[[0, 1, 3]])
+    # grow: W=4 -> W'=6; survivors bit-exact, joiners = survivor mean
+    grow_ids = [0, 1, 2, 3, 4, 5]
+    tree, _, _ = restore_stacked(str(tmp_path), row_abs, grow_ids)
+    w = np.asarray(tree["params"]["w"])
+    np.testing.assert_array_equal(w[:4], np.asarray(p_w["w"]))
+    np.testing.assert_allclose(
+        w[4], np.asarray(p_w["w"]).astype(np.float32).mean(0), rtol=1e-6)
+
+
+def test_global_checkpoint_round_trip_is_bit_exact(tmp_path):
+    params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    opt = adamw(lambda s: 1e-3)
+    state = opt.init(params)
+    params2, state2 = opt.update(
+        jax.tree_util.tree_map(jnp.ones_like, params), state, params)
+    save_checkpoint(str(tmp_path), 5, {"params": params2, "opt": state2})
+    abs_tree = jax.eval_shape(lambda: {"params": params2, "opt": state2})
+    tree, _ = restore_checkpoint(str(tmp_path), abs_tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(
+                        {"params": params2, "opt": state2})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint retention (keep_last GC + orphan tmp sweep)
+# ---------------------------------------------------------------------------
+def test_keep_last_gc_and_orphan_tmp_sweep(tmp_path):
+    orphan = tmp_path / ".tmp_step_00000042"   # killed run at another step
+    orphan.mkdir()
+    for s in range(1, 6):
+        save_checkpoint(str(tmp_path), s, {"w": jnp.ones((2,)) * s},
+                        keep_last=2)
+    assert not orphan.exists()
+    names = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert names == ["step_00000004", "step_00000005"]
+    assert latest_step(str(tmp_path)) == 5
+    # explicit helpers behave standalone
+    (tmp_path / ".tmp_step_00000099").mkdir()
+    assert sweep_tmp(str(tmp_path))
+    assert gc_checkpoints(str(tmp_path), 1)
+    assert latest_step(str(tmp_path)) == 5
+
+
+# ---------------------------------------------------------------------------
+# recovery policies: convergence after a mid-run failure
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["sync", "local_sgd", "easgd"])
+def test_convergence_after_midrun_failure(mode, tmp_path):
+    problem = ElasticProblem()
+    free = run_elastic(problem, mode=mode, steps=60,
+                       ckpt_dir=str(tmp_path / "free"))
+    fail = run_elastic(problem, mode=mode, steps=60,
+                       ckpt_dir=str(tmp_path / "fail"),
+                       trace=FailureTrace.single_failure(23, 1))
+    assert len(fail.final_alive) == 3
+    assert fail.recoveries and fail.recoveries[0].cause == "fail"
+    # still converges: final loss within tolerance of the failure-free run
+    assert fail.final_loss < max(10 * free.final_loss, 5e-3)
+    if mode == "sync":
+        assert fail.recoveries[0].lost_steps <= 10  # bounded by cadence
+        assert fail.recoveries[0].latency > 0
+    else:
+        assert fail.recoveries[0].lost_steps == 0   # continuation: no rewind
+
+
+def test_sync_goodput_under_single_failure(tmp_path):
+    problem = ElasticProblem()
+    kw = dict(mode="sync", workers=8, steps=80, global_batch=56,
+              ckpt_every=10)
+    free = run_elastic(problem, ckpt_dir=str(tmp_path / "a"), **kw)
+    fail = run_elastic(problem, ckpt_dir=str(tmp_path / "b"),
+                       trace=FailureTrace.single_failure(37, 1), **kw)
+    assert fail.goodput >= 0.8 * free.goodput
+
+
+def test_timeout_death_and_scaleup_join(tmp_path):
+    problem = ElasticProblem()
+    trace = FailureTrace([TraceEvent(15, "hang", 0),
+                          TraceEvent(30, "join", 4)])
+    res = run_elastic(problem, mode="local_sgd", steps=50, trace=trace,
+                      ckpt_dir=str(tmp_path))
+    assert res.recoveries[0].cause == "timeout"
+    assert res.final_alive == (1, 2, 3, 4)
+    assert res.final_loss < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation: telemetry -> DBS replan
+# ---------------------------------------------------------------------------
+def test_straggler_replan_reduces_step_time():
+    mon = ThroughputMonitor()
+    alive = (0, 1, 2, 3)
+    uniform, slow = replan_on_straggle(mon, alive, 64)
+    assert slow == () and uniform == {w: 16 for w in alive}
+    mon.observe(2, 16, 64.0)                   # worker 2 at 1/4 speed
+    split, slow = replan_on_straggle(mon, alive, 64)
+    assert slow == (2,)
+    assert sum(split.values()) == 64           # exact global batch
+    assert split[2] < 16                       # slow worker sheds work
+    rates = {0: 1.0, 1: 1.0, 2: 0.25, 3: 1.0}
+    assert step_time(split, rates) < step_time(uniform, rates)
+
+
+def test_plan_split_sums_exactly():
+    split = plan_split(63, {0: 1.0, 1: 2.0, 2: 4.0})
+    assert sum(split.values()) == 63
+    assert split[2] > split[0]
+
+
+def test_sim_driver_replans_on_trace_slowdown(tmp_path):
+    problem = ElasticProblem()
+    trace = FailureTrace([TraceEvent(10, "slow", 1, 0.2)])
+    res = run_elastic(problem, mode="sync", steps=60, trace=trace,
+                      ckpt_dir=str(tmp_path))
+    assert res.splits_replanned > 0
+    assert res.final_loss < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# the real LM path: launch/train.py --elastic
+# ---------------------------------------------------------------------------
+def test_elastic_lm_launcher_survives_failure(tmp_path):
+    from repro.launch.train import train
+    trace = [{"step": 6, "kind": "fail", "worker": 1}]
+    tp = tmp_path / "trace.json"
+    tp.write_text(json.dumps(trace))
+    out = train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "16",
+                 "--batch", "4", "--seq", "32", "--log-every", "100",
+                 "--elastic", "--workers", "4",
+                 "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-every", "4",
+                 "--keep-last", "2",
+                 "--failure-trace", str(tp)])
+    assert len(out["losses"]) == 16
+    assert out["recoveries"] and out["recoveries"][0].cause == "fail"
+    assert out["final_alive"] == (0, 2, 3)
+    assert out["losses"][-1] < out["losses"][0]     # still learning
+    # retention held: at most keep-last complete checkpoints on disk
+    ckpts = list((tmp_path / "ckpt").glob("step_*"))
+    assert 0 < len(ckpts) <= 2
