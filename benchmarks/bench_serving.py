@@ -14,6 +14,8 @@ Reported: total useful tokens/s, slot occupancy, speedup.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -26,6 +28,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.serve import make_static_fns
 from repro.models import model as MD
 from repro.serving import Request, ServeEngine
+
+RESULTS = pathlib.Path(__file__).parent / "results"
 
 
 def make_stream(rng, n, vocab, prompt_lens, gen_lens):
@@ -89,7 +93,11 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed passes per path; best (min time) reported")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller stream, fewer repeats")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.requests, args.repeats = 12, 2
 
     cfg = get_config(args.arch, smoke=True)
     if jax.default_backend() == "cpu":
@@ -131,7 +139,14 @@ def main(argv=None):
     print(f"continuous : {cont['tokens']:4d} tok in {cont['time_s']:.3f}s"
           f"  -> {cont['tput']:8.1f} tok/s  occupancy={cont['occupancy']:.2f}")
     print(f"speedup    : {speedup:.2f}x")
-    return {"static": static, "continuous": cont, "speedup": speedup}
+    report = {"arch": cfg.name, "slots": args.slots,
+              "requests": args.requests, "static": static,
+              "continuous": cont, "speedup": speedup}
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "serving.json"
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    return report
 
 
 if __name__ == "__main__":

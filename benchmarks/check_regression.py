@@ -1,0 +1,127 @@
+"""CI benchmark-regression gate.
+
+Diffs fresh `benchmarks/results/*.json` against the committed
+`benchmarks/baselines/*.json` and fails on a >25% regression in any
+gated metric (higher-is-better throughout: elastic goodput/ratios,
+serving tokens/s, elastic-serving goodput).  Improvements never fail the
+gate — the baseline is a floor, not a pin — so deterministic metrics
+(everything simulated-time: elastic + elastic_serving) only trip on real
+behavior changes, while the wall-clock serving numbers get the same 25%
+headroom against machine noise.
+
+  PYTHONPATH=src python benchmarks/check_regression.py
+  PYTHONPATH=src python benchmarks/check_regression.py --write-baselines
+
+`--write-baselines` snapshots the current results as the new baselines —
+run it (and commit the diff) after an intentional perf change, on the
+same bench flags CI uses (the `--quick` smoke set).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+HERE = pathlib.Path(__file__).parent
+BASELINES = HERE / "baselines"
+RESULTS = HERE / "results"
+
+DEFAULT_MIN_RATIO = 0.75  # fresh/baseline below this = >25% regression
+
+# gated metrics per results file: (dotted path, min fresh/baseline ratio).
+# Everything here is higher-is-better.  elastic + elastic_serving numbers
+# are deterministic (simulated time); serving tput/speedup are wall-clock
+# and rely on the 25% headroom.
+GATES = {
+    "elastic": [
+        ("modes.sync.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("modes.local_sgd.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("modes.easgd.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("modes.sync.free.goodput", DEFAULT_MIN_RATIO),
+    ],
+    "serving": [
+        ("continuous.tput", DEFAULT_MIN_RATIO),
+        ("speedup", DEFAULT_MIN_RATIO),
+    ],
+    "elastic_serving": [
+        ("scenarios.free.goodput", DEFAULT_MIN_RATIO),
+        ("scenarios.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("scenarios.churn.goodput_ratio", DEFAULT_MIN_RATIO),
+    ],
+}
+
+
+def dig(tree, dotted: str):
+    cur = tree
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return float(cur)
+
+
+def check(name: str, gates) -> list:
+    base_p = BASELINES / f"{name}.json"
+    res_p = RESULTS / f"{name}.json"
+    if not base_p.exists():
+        return [(name, "<baseline missing>", None, None, True)]
+    if not res_p.exists():
+        return [(name, "<results missing — bench did not run>", None, None,
+                 True)]
+    base = json.loads(base_p.read_text())
+    res = json.loads(res_p.read_text())
+    rows = []
+    for path, min_ratio in gates:
+        b = dig(base, path)
+        f = dig(res, path)
+        ratio = f / b if b else float("inf")
+        rows.append((name, path, b, f, ratio < min_ratio))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="snapshot current results as the new baselines")
+    args = ap.parse_args(argv)
+
+    if args.write_baselines:
+        BASELINES.mkdir(exist_ok=True)
+        for name in GATES:
+            src = RESULTS / f"{name}.json"
+            if not src.exists():
+                print(f"SKIP {name}: no results (run the bench first)")
+                continue
+            shutil.copy(src, BASELINES / f"{name}.json")
+            print(f"baseline <- {src}")
+        return 0
+
+    failures = 0
+    print(f"{'bench':16s} {'metric':40s} {'baseline':>10s} {'fresh':>10s} "
+          f"{'ratio':>7s}")
+    for name, gates in GATES.items():
+        for bench, path, b, f, bad in check(name, gates):
+            if b is None:
+                print(f"{bench:16s} {path:40s} {'':>10s} {'':>10s} "
+                      f"{'FAIL':>7s}")
+                failures += 1
+                continue
+            ratio = f / b if b else float("inf")
+            mark = "FAIL" if bad else "ok"
+            print(f"{bench:16s} {path:40s} {b:10.3f} {f:10.3f} "
+                  f"{ratio:6.2f}x {mark}")
+            failures += bad
+    if failures:
+        print(f"\n{failures} gated metric(s) regressed >25% vs committed "
+              f"baselines.\nIf intentional, refresh with: "
+              f"PYTHONPATH=src python benchmarks/check_regression.py "
+              f"--write-baselines  (then commit benchmarks/baselines/)")
+        return 1
+    print("\nall gated metrics within 25% of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,7 @@ Sections:
   moe_routing: global vs group-wise MoE routing costs (§Perf iteration 1)
   serving    : continuous vs static batching on a mixed-length stream
   elastic    : recovery latency + goodput under failure traces
+  elastic_serving : multi-replica fleet drain/re-admit under failure traces
   roofline   : §Roofline report from benchmarks/results/*.json
 """
 from __future__ import annotations
@@ -28,7 +29,8 @@ import time
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SECTIONS = ["techniques", "classic", "rl", "pipeline", "kernels",
-            "moe_routing", "serving", "elastic", "roofline"]
+            "moe_routing", "serving", "elastic", "elastic_serving",
+            "roofline"]
 
 
 def _banner(name: str) -> None:
@@ -39,7 +41,8 @@ _MODULES = {
     "techniques": "bench_techniques", "classic": "bench_classic",
     "rl": "bench_rl", "kernels": "bench_kernels",
     "moe_routing": "bench_moe_routing", "serving": "bench_serving",
-    "elastic": "bench_elastic", "roofline": "roofline",
+    "elastic": "bench_elastic", "elastic_serving": "bench_elastic_serving",
+    "roofline": "roofline",
 }
 _ARGV = {"roofline": ["--mesh", "both"]}
 

@@ -11,6 +11,10 @@ Where to go next:
     `python -m repro.launch.train --elastic --failure-trace=trace.json
     --ckpt-dir=...` (see `repro.elastic`)
   * continuous-batching serving: `examples/serve_stream.py`
+  * elastic multi-replica serving (replica crash / hang / join / straggler
+    under the same trace machinery, zero dropped requests):
+    `examples/elastic_serve.py`, or the launcher
+    `python -m repro.launch.serve --replicas 3 --failure-trace=trace.json`
 """
 import jax
 import jax.numpy as jnp

@@ -14,6 +14,7 @@ from repro.elastic.reshard import (assign_shards, plan_split,
                                    save_stacked, take_rows)
 from repro.elastic.recovery import (BoundedStalenessContinuation,
                                     EASGDCenterSurvival,
+                                    ServingDrainReadmit,
                                     SyncCheckpointRestore)
 from repro.elastic.straggler import (ThroughputMonitor, replan_on_straggle,
                                      step_time)
@@ -26,7 +27,7 @@ __all__ = [
     "assign_shards", "plan_split", "reshard_stacked", "restore_stacked",
     "save_stacked", "take_rows",
     "BoundedStalenessContinuation", "EASGDCenterSurvival",
-    "SyncCheckpointRestore",
+    "ServingDrainReadmit", "SyncCheckpointRestore",
     "ThroughputMonitor", "replan_on_straggle", "step_time",
     "ElasticProblem", "ElasticRunResult", "RecoveryRecord",
     "elastic_lm_loop", "run_elastic",

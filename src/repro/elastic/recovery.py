@@ -32,17 +32,34 @@ state (core/data_parallel.py):
 All three are validated for convergence-after-failure in
 `tests/test_elastic.py` (final loss within tolerance of the failure-free
 run under the same trace-free data stream).
+
+**Serving** (`ServingDrainReadmit`) — the inference-side analogue: a
+serving replica's "state" is its KV/recurrent caches plus the per-slot
+request lifecycle.  Caches are recomputable from the token stream, so
+recovery is not restore-and-rewind but **drain and re-admit**: tokens the
+host had already harvested (and streamed to clients) are preserved, and
+each in-flight request is requeued as a *prefix continuation* — prompt =
+original prompt + emitted tokens, budget = remaining budget — which a
+surviving replica re-prefills.  Greedy decoding is slot-local and
+deterministic, so the continuation's tokens are bit-identical to the
+suffix the dead replica would have produced; stitching the preserved
+prefix back on reconstructs exactly the failure-free output
+(`benchmarks/bench_elastic_serving.py` asserts this end to end).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.elastic.reshard import reshard_stacked
+
+# NOTE: repro.serving types are imported lazily inside ServingDrainReadmit:
+# serving.fleet imports this module, so a top-level import here would cycle.
 
 Pytree = Any
 
@@ -108,3 +125,69 @@ class EASGDCenterSurvival:
             return jnp.stack(rows, axis=0)
 
         return jax.tree_util.tree_map(remap, params_w, center), center
+
+
+@dataclasses.dataclass
+class ServingDrainReadmit:
+    """Serving recovery: drained in-flight requests become prefix
+    continuations; finished continuations are stitched back together.
+
+    The policy owns the per-request delivery ledger: `emitted[rid]` is
+    every token the client has already received across all of the
+    request's incarnations (a request can be drained more than once if
+    its second replica also dies).  `readmit` turns a replica's drain
+    output into continuation Requests sorted by rid — submission order —
+    so the router re-admits the oldest interrupted work first (FIFO
+    fairness across survivors).  `stitch` rebuilds the client-visible
+    FinishedRequest from the preserved prefix + the continuation's tail.
+    """
+    emitted: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    originals: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    readmitted: int = 0
+
+    def readmit(self, drained: Sequence[Any]) -> List[Any]:
+        """drained: `ServeEngine.drain()` output (DrainedRequest records).
+        Returns continuation requests in rid (= submission) order."""
+        from repro.serving.request import Request
+
+        out = []
+        for d in sorted(drained, key=lambda d: d.request.rid):
+            req = d.request
+            rid = req.rid
+            if rid not in self.originals:
+                self.originals[rid] = req
+                self.emitted[rid] = []
+            orig = self.originals[rid]
+            self.emitted[rid].extend(d.emitted)
+            prefix = self.emitted[rid]
+            remaining = orig.max_new_tokens - len(prefix)
+            assert remaining > 0, f"rid {rid} drained after completion"
+            if prefix:
+                prompt = np.concatenate([
+                    np.asarray(orig.prompt, np.int32),
+                    np.asarray(prefix, np.int32)])
+                cont = Request(rid=rid, prompt=prompt,
+                               max_new_tokens=remaining, eos_id=orig.eos_id,
+                               extra_embeds=orig.extra_embeds)
+            else:
+                cont = orig  # nothing delivered yet: re-admit verbatim
+            self.readmitted += 1
+            out.append(cont)
+        return out
+
+    def stitch(self, fin: Any) -> Any:
+        """Merge a finished (possibly continuation) FinishedRequest with
+        its preserved prefix; untouched requests pass through unchanged."""
+        from repro.serving.request import FinishedRequest
+
+        if fin.rid not in self.originals:
+            return fin
+        orig = self.originals.pop(fin.rid)
+        prefix = self.emitted.pop(fin.rid)
+        return FinishedRequest(
+            rid=fin.rid,
+            prompt_len=len(np.asarray(orig.prompt)),
+            tokens=prefix + fin.tokens,
+            finish_reason=fin.finish_reason,
+            admitted_tick=fin.admitted_tick,
+            finished_tick=fin.finished_tick)

@@ -9,11 +9,19 @@ per-request position vectors, active-mask gated cache updates, and FIFO
 admission that backfills a slot the moment its request retires, so a
 mixed-length request stream sustains near-full batch occupancy.
 
+Elastic fleet (--replicas N): N continuous-batching replicas behind the
+straggler-aware router, driven by the same trace-driven membership
+machine as elastic training — replica death drains + re-admits in-flight
+requests across survivors (`--failure-trace` replays crash / hang /
+join / slow events; without one the fleet runs failure-free).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 64 --gen 32
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --continuous --requests 16 --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --replicas 3 --requests 24 --batch 2 --failure-trace trace.json
 """
 from __future__ import annotations
 
@@ -98,26 +106,15 @@ def _serve_static(params, cfg, args):
 
 
 def _serve_continuous(params, cfg, args):
-    from repro.serving import Request, ServeEngine
+    from repro.serving import ServeEngine
 
-    rng = np.random.RandomState(args.seed + 1)
-    S, G = args.prompt_len, args.gen
     # drawn lengths never exceed the CLI bounds: cache_len = S + G must
     # hold the longest prompt plus the largest generation budget
-    plens = sorted({min(S, max(1, S // 2)), min(S, max(1, 3 * S // 4)), S})
-    gens = sorted({max(1, G // 4), max(1, G // 2), G})
-    reqs = [Request(rid=i,
-                    prompt=rng.randint(0, cfg.vocab_size,
-                                       size=int(rng.choice(plens))),
-                    max_new_tokens=int(rng.choice(gens)))
-            for i in range(args.requests)]
-
+    S, G = args.prompt_len, args.gen
+    reqs = _make_stream(cfg, args)
     n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
     engine = ServeEngine(params, cfg, num_slots=args.batch,
                          cache_len=S + G + n_prefix)
-    if cfg.arch_type in ("vlm", "audio"):
-        for r in reqs:
-            r.extra_embeds = _make_extra(cfg, 1)
 
     t0 = time.time()
     finished = engine.run(reqs)
@@ -136,6 +133,55 @@ def _serve_continuous(params, cfg, args):
     return {"finished": finished, "stats": st, "t_total": dt}
 
 
+def _make_stream(cfg, args):
+    """Deterministic mixed-length request stream shared by the continuous
+    and fleet paths."""
+    from repro.serving import Request
+
+    rng = np.random.RandomState(args.seed + 1)
+    S, G = args.prompt_len, args.gen
+    plens = sorted({min(S, max(1, S // 2)), min(S, max(1, 3 * S // 4)), S})
+    gens = sorted({max(1, G // 4), max(1, G // 2), G})
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=int(rng.choice(plens))),
+                    max_new_tokens=int(rng.choice(gens)))
+            for i in range(args.requests)]
+    if cfg.arch_type in ("vlm", "audio"):
+        for r in reqs:
+            r.extra_embeds = _make_extra(cfg, 1)
+    return reqs
+
+
+def _serve_fleet(params, cfg, args):
+    from repro.elastic import FailureTrace
+    from repro.serving import ServeFleet
+
+    trace = (FailureTrace.load(args.failure_trace)
+             if args.failure_trace else None)
+    n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+    fleet = ServeFleet(params, cfg, replicas=args.replicas,
+                       num_slots=args.batch,
+                       cache_len=args.prompt_len + args.gen + n_prefix,
+                       trace=trace)
+    reqs = _make_stream(cfg, args)
+    t0 = time.time()
+    finished = fleet.run(reqs)
+    dt = time.time() - t0
+    st = fleet.stats()
+    print(f"arch={cfg.name} replicas={args.replicas} slots={args.batch} "
+          f"requests={args.requests} trace="
+          f"{args.failure_trace or '<failure-free>'}")
+    print(f"fleet: {dt:.3f}s wall={st['wall']} ticks  "
+          f"{st['delivered_tokens']} tokens  "
+          f"goodput={st['goodput']:.2f} tok/wall-tick  "
+          f"drains={st['drains']} readmitted={st['readmitted']}  "
+          f"survivors={st['replicas']}")
+    print(f"routing: {st['routed']}")
+    print("sample generation (first request):", finished[0].tokens[:16])
+    return {"finished": finished, "stats": st, "t_total": dt}
+
+
 def serve(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -147,8 +193,16 @@ def serve(argv=None) -> dict:
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching over a slot pool "
                          "(repro.serving.ServeEngine)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="elastic fleet of N continuous-batching replicas "
+                         "(repro.serving.ServeFleet); --batch = slots per "
+                         "replica")
+    ap.add_argument("--failure-trace", default=None,
+                    help="--replicas: FailureTrace JSON to replay "
+                         "(fail/hang/recover/join/slow events against "
+                         "replica ids)")
     ap.add_argument("--requests", type=int, default=16,
-                    help="--continuous: number of requests in the stream")
+                    help="--continuous/--replicas: requests in the stream")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -162,6 +216,8 @@ def serve(argv=None) -> dict:
     with SH.use_mesh(mesh), SH.axis_env(SH.DP_TP_ENV):
         params = jax.jit(lambda k: MD.init_model(cfg, k))(
             jax.random.PRNGKey(args.seed))
+        if args.replicas:
+            return _serve_fleet(params, cfg, args)
         if args.continuous:
             return _serve_continuous(params, cfg, args)
         return _serve_static(params, cfg, args)

@@ -39,14 +39,27 @@ occupancy, and total tokens/s approaches B x single-request decode speed
 instead of being gated by the slowest request in each static batch
 (`benchmarks/bench_serving.py` measures both).
 
+The fleet layer (`fleet.py` / `router.py`) lifts the same playbook one
+level up — from slots within a replica to replicas within a fleet: the
+trace-driven `elastic.membership` failure detector drives replica
+drain/re-admit (crash, hang-to-timeout), scale-up joins, and a
+throughput-EMA router that weights admission away from stragglers
+(`benchmarks/bench_elastic_serving.py` pins the recovery cost).
+
 Public API:
-  Request / FinishedRequest  (request.py)
-  FifoScheduler / SlotPool   (scheduler.py)
-  ServeEngine                (engine.py)
+  Request / FinishedRequest      (request.py)
+  FifoScheduler / SlotPool       (scheduler.py)
+  ServeEngine / ServeProgram / DrainedRequest  (engine.py)
+  ServeFleet / Replica           (fleet.py)
+  ThroughputRouter               (router.py)
 """
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import (DrainedRequest, ServeEngine,
+                                  ServeProgram)
+from repro.serving.fleet import Replica, ServeFleet
 from repro.serving.request import FinishedRequest, Request
+from repro.serving.router import ThroughputRouter
 from repro.serving.scheduler import FifoScheduler, SlotPool
 
 __all__ = ["Request", "FinishedRequest", "FifoScheduler", "SlotPool",
-           "ServeEngine"]
+           "ServeEngine", "ServeProgram", "DrainedRequest",
+           "ServeFleet", "Replica", "ThroughputRouter"]

@@ -32,7 +32,8 @@ WHEN work runs, never WHAT each request computes.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,22 +42,37 @@ import numpy as np
 from repro.launch.steps import make_serve_cb_step, sharded_argmax
 from repro.models import model as MD
 from repro.models.config import ModelConfig
-from repro.serving.request import FinishedRequest, Request
+from repro.serving.request import (FinishedRequest, Request,
+                                   validate_budget)
 from repro.serving.scheduler import FifoScheduler, SlotPool
 
 CHUNK_CAP = 8  # max decode ticks between host syncs (EOS eviction latency)
 
 
-class ServeEngine:
-    def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
-                 cache_len: int, chunk_cap: int = CHUNK_CAP):
-        self.params = params
-        self.cfg = cfg
-        self.num_slots = num_slots
-        self.cache_len = cache_len
-        self.chunk_cap = chunk_cap
-        self.n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+@dataclasses.dataclass
+class DrainedRequest:
+    """Resumable state of one in-flight request pulled off a dying replica.
 
+    `emitted` is what the HOST had harvested (and hence streamed to the
+    client) before the drain; tokens still device-side — the un-synced tail
+    of a chunk, a pending prefill token — die with the replica and must be
+    recomputed by the continuation (`elastic.recovery.ServingDrainReadmit`).
+    """
+    request: Request
+    emitted: List[int]
+
+
+class ServeProgram:
+    """The compiled half of the engine: admit + chunk-decode dispatches for
+    one (cfg, cache_len).  Engines hold host-side slot state; the program
+    holds jitted callables, so a fleet shares ONE program across all its
+    replicas and a scale-up `join` replica starts serving without paying
+    compilation (jax.jit re-traces per shape under the hood, so one program
+    also serves engines with different slot counts)."""
+
+    def __init__(self, cfg: ModelConfig, *, cache_len: int):
+        self.cfg = cfg
+        self.cache_len = cache_len
         C = cache_len
 
         def _admit_fn(params, prompt, extra, cache, tokens, pos, active,
@@ -106,9 +122,31 @@ class ServeEngine:
         # jax.jit caches compilations per prompt length (shape-keyed); a
         # production deployment would bucket prompt lengths — the smoke
         # streams here draw from a handful of lengths
-        self._admit_jit = jax.jit(_admit_fn, donate_argnums=(3,))
-        self._chunk_fns = {}
+        self.admit = jax.jit(_admit_fn, donate_argnums=(3,))
+        self._chunk_fns: Dict[int, Any] = {}
         self._make_chunk = _chunk_fn
+
+    def chunk(self, k: int):
+        fn = self._chunk_fns.get(k)
+        if fn is None:
+            fn = self._chunk_fns[k] = self._make_chunk(k)
+        return fn
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
+                 cache_len: int, chunk_cap: int = CHUNK_CAP,
+                 program: Optional[ServeProgram] = None):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.chunk_cap = chunk_cap
+        self.n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+        if program is not None and program.cache_len != cache_len:
+            raise ValueError(f"program cache_len {program.cache_len} != "
+                             f"engine cache_len {cache_len}")
+        self.program = program or ServeProgram(cfg, cache_len=cache_len)
         self.reset()
 
     def reset(self) -> None:
@@ -136,13 +174,7 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        plen = len(np.asarray(req.prompt))
-        budget = plen + self.n_prefix + req.max_new_tokens
-        if budget > self.cache_len:
-            raise ValueError(
-                f"request {req.rid}: prompt {plen} + prefix {self.n_prefix} "
-                f"+ gen {req.max_new_tokens} exceeds cache_len "
-                f"{self.cache_len}")
+        validate_budget(req, self.n_prefix, self.cache_len)
         self.scheduler.submit(req)
 
     # ------------------------------------------------------------------
@@ -150,7 +182,7 @@ class ServeEngine:
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
         start_pos = prompt.shape[1] + self.n_prefix
         (first, self.cache, self.tokens, self.pos_d, self.active_d,
-         self.gen_d, self.maxgen_d, self.eos_d) = self._admit_jit(
+         self.gen_d, self.maxgen_d, self.eos_d) = self.program.admit(
             self.params, prompt, req.extra_embeds, self.cache, self.tokens,
             self.pos_d, self.active_d, self.gen_d, self.maxgen_d, self.eos_d,
             jnp.int32(slot), jnp.int32(start_pos),
@@ -216,9 +248,7 @@ class ServeEngine:
         compile), capped at chunk_cap."""
         m = min(min(remaining), self.chunk_cap)
         k = 1 << (m.bit_length() - 1)
-        fn = self._chunk_fns.get(k)
-        if fn is None:
-            fn = self._chunk_fns[k] = self._make_chunk(k)
+        fn = self.program.chunk(k)
         (self.tokens, self.cache, self.pos_d, self.active_d, self.gen_d,
          T, A) = fn(self.params, self.cache, self.tokens, self.pos_d,
                     self.active_d, self.gen_d, self.maxgen_d, self.eos_d)
@@ -262,6 +292,40 @@ class ServeEngine:
         while not self.scheduler.done:
             self.tick()
         return sorted(self.finished, key=lambda f: f.rid)
+
+    # ------------------------------------------------------------------
+    @property
+    def free_capacity(self) -> int:
+        """Requests this engine can still accept without queueing beyond
+        its pool: free slots minus admissions already waiting in the
+        engine's own FIFO.  The fleet router admits against this, keeping
+        the per-replica queue bounded by the slot count so a replica death
+        never strands a deep private backlog."""
+        return max(0, self.num_slots - self.pool.num_active
+                   - self.scheduler.pending)
+
+    def drain(self) -> List[DrainedRequest]:
+        """Tear down the replica: pull every in-flight and queued request
+        off the engine in a resumable form.
+
+        Active slots keep their host-harvested tokens (`pool.generated` —
+        already streamed to clients); device-side tokens (the pending
+        prefill token, the un-synced tail of a chunk) are lost with the
+        replica's device state and will be recomputed by the continuation.
+        Queued-but-unadmitted requests come back untouched.  Ordered by
+        request id so re-admission stays FIFO-fair in submission order.
+        """
+        out = []
+        for slot in np.flatnonzero(self.pool.active):
+            slot = int(slot)
+            out.append(DrainedRequest(self.pool.request[slot],
+                                      list(self.pool.generated[slot])))
+            self.pool.release(slot)
+        while self.scheduler.queue:
+            out.append(DrainedRequest(self.scheduler.queue.popleft(), []))
+        self._pending_first = {}
+        self.active_d = jnp.zeros((self.num_slots,), bool)
+        return sorted(out, key=lambda d: d.request.rid)
 
     # ------------------------------------------------------------------
     @property

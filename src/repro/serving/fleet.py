@@ -1,0 +1,225 @@
+"""Elastic multi-replica serving: the training-side fault model applied
+to a fleet of `ServeEngine` slot pools.
+
+Every replica is one continuous-batching engine; the fleet is driven by
+the SAME trace-driven `elastic.membership` state machine that powers
+elastic training, so every serving fault scenario — crash, hang that
+escalates through the heartbeat timeout, scale-up join, straggler — is a
+replayable `FailureTrace` and the whole run is a deterministic function
+of it:
+
+  fail / hang->timeout   the dead replica is **drained**: host-harvested
+                         tokens are preserved (they were streamed), the
+                         remaining budget is requeued at the router as a
+                         prefix continuation (`ServingDrainReadmit`) and
+                         re-admitted FIFO-fairly across survivors.  Greedy
+                         decoding is slot-local, so completed outputs are
+                         bit-identical to the failure-free run.
+  join                   a fresh replica spins up sharing the fleet's
+                         compiled `ServeProgram` (no recompile) and its
+                         nominal-rate routing score immediately absorbs
+                         queue backlog.
+  slow                   the replica executes fewer engine ticks per wall
+                         tick; the router's throughput EMA observes the
+                         slowdown and weights admission away from it (the
+                         serving analogue of the DBS batch replan).
+
+Time is *simulated*, as in `elastic.driver.run_elastic`: the membership
+machine advances one wall tick per fleet step, and each replica earns
+`rate` execution credits per wall tick (an engine op costs its device
+ticks: prefill 1, a fused k-tick decode chunk k).  Goodput — delivered
+tokens per wall tick — is therefore exact and trace-deterministic, which
+is what lets `benchmarks/bench_elastic_serving.py` assert recovery cost
+and CI gate it against committed baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.elastic.membership import ALIVE, FailureTrace, Membership
+from repro.elastic.recovery import ServingDrainReadmit
+from repro.serving.engine import CHUNK_CAP, ServeEngine, ServeProgram
+from repro.serving.request import (FinishedRequest, Request,
+                                   validate_budget)
+from repro.serving.router import ThroughputRouter
+
+
+@dataclasses.dataclass
+class Replica:
+    """One serving replica: an engine plus its simulated-time ledger."""
+    rid: int
+    engine: ServeEngine
+    credits: float = 0.0
+    fin_cursor: int = 0  # engine.finished entries already collected
+
+    @property
+    def load(self) -> int:
+        return self.engine.pool.num_active + self.engine.scheduler.pending
+
+
+class ServeFleet:
+    def __init__(self, params, cfg, *, replicas: int, num_slots: int,
+                 cache_len: int, trace: Optional[FailureTrace] = None,
+                 heartbeat_timeout: int = 3, chunk_cap: int = CHUNK_CAP,
+                 router_decay: float = 0.5):
+        if replicas < 1:
+            raise ValueError("need at least one replica")
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.chunk_cap = chunk_cap
+        # one compiled program shared by every replica, present and future
+        self.program = ServeProgram(cfg, cache_len=cache_len)
+        self.membership = Membership(replicas, trace or FailureTrace(),
+                                     heartbeat_timeout=heartbeat_timeout)
+        self.router = ThroughputRouter(decay=router_decay)
+        self.policy = ServingDrainReadmit()
+        self.replicas: Dict[int, Replica] = {
+            r: self._spawn(r) for r in range(replicas)}
+        self.finished: List[FinishedRequest] = []
+        self.wall = 0
+        self.drains = 0
+        self.submitted = 0
+        self._n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+
+    def _spawn(self, rid: int) -> Replica:
+        return Replica(rid, ServeEngine(
+            self.params, self.cfg, num_slots=self.num_slots,
+            cache_len=self.cache_len, chunk_cap=self.chunk_cap,
+            program=self.program))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        validate_budget(req, self._n_prefix, self.cache_len)
+        self.router.submit(req)
+        self.submitted += 1
+
+    # ------------------------------------------------------------------
+    def _collect(self, rep: Replica) -> None:
+        """Pull newly finished requests off a replica, stitching drained
+        prefixes back on."""
+        fins = rep.engine.finished
+        for fin in fins[rep.fin_cursor:]:
+            self.finished.append(self.policy.stitch(fin))
+        rep.fin_cursor = len(fins)
+
+    def _drain_dead(self, rid: int) -> None:
+        rep = self.replicas.pop(rid)
+        self._collect(rep)  # finished-before-death outputs were delivered
+        conts = self.policy.readmit(rep.engine.drain())
+        self.router.requeue_front(conts)
+        self.router.forget(rid)
+        self.drains += 1
+
+    def _routable(self) -> Dict[int, Replica]:
+        """Replicas the failure detector still trusts with NEW work: ALIVE
+        and not suspected.  (A hung-but-undetected replica stays routable —
+        exactly the window a real detector has — and anything routed there
+        is drained when the timeout declares it dead.)"""
+        out = {}
+        for rid, rep in self.replicas.items():
+            ws = self.membership.workers[rid]
+            if ws.status == ALIVE:
+                out[rid] = rep
+        return out
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One wall tick: membership transitions, routing, execution."""
+        transitions = self.membership.advance(self.wall)
+        for t in transitions:
+            if t.kind == "death" and t.worker in self.replicas:
+                self._drain_dead(t.worker)
+            elif t.kind == "join":
+                self.replicas[t.worker] = self._spawn(t.worker)
+            # "rate" transitions need no explicit handling: the slowdown is
+            # enacted by the credit schedule below and the router's EMA
+            # observes its effect on actual progress
+
+        if not self.replicas and (self.router.pending or
+                                  self.policy.originals):
+            raise RuntimeError(
+                f"wall {self.wall}: all replicas dead with work pending")
+
+        # route backlog onto routable replicas (joiners included: they
+        # score nominal-rate with zero load and soak up the queue)
+        routable = self._routable()
+        assignments = self.router.route(
+            {r: rep.engine.free_capacity for r, rep in routable.items()},
+            {r: rep.load for r, rep in routable.items()})
+        for req, rid in assignments:
+            routable[rid].engine.submit(req)
+
+        # execute: each replica earns `rate` credits; a hung replica makes
+        # no progress at all (its heartbeat silence is what the membership
+        # machine escalates).  Ops bill their true device cost so a fused
+        # k-tick chunk spends k credits — a rate-0.25 straggler therefore
+        # runs one pool tick every 4 wall ticks.
+        rates = self.membership.rates()
+        for rid in sorted(self.replicas):
+            rep = self.replicas[rid]
+            ws = self.membership.workers[rid]
+            if ws.hung:
+                self.router.observe(rid, 0.0)
+                continue
+            rep.credits = min(rep.credits + rates.get(rid, 1.0),
+                              float(self.chunk_cap))
+            had_work = rep.load > 0
+            executed = 0
+            while rep.credits >= 1.0:
+                before = rep.engine.decode_ticks
+                kind = rep.engine.tick()
+                if kind == "idle":
+                    rep.credits = min(rep.credits, 1.0)
+                    break
+                cost = max(1, rep.engine.decode_ticks - before)
+                rep.credits -= cost
+                executed += cost
+            # idle != slow: an empty replica's EMA must not decay toward
+            # zero (it would lose routing to LOADED survivors when a drain
+            # requeues work), so only ticks where the replica had work —
+            # or was hung above — feed the monitor
+            if had_work:
+                self.router.observe(rid, float(executed))
+            self._collect(rep)
+
+        self.wall += 1
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return (not self.router.pending
+                and all(rep.engine.scheduler.done
+                        for rep in self.replicas.values()))
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_wall: int = 100_000) -> List[FinishedRequest]:
+        """Drain `requests` (plus queued backlog) to completion under the
+        trace; returns stitched finished requests sorted by request id."""
+        for req in requests or ():
+            self.submit(req)
+        while not self.done:
+            if self.wall >= max_wall:
+                raise RuntimeError(f"fleet did not drain in {max_wall} "
+                                   f"wall ticks")
+            self.step()
+        return sorted(self.finished, key=lambda f: f.rid)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        toks = sum(len(f.tokens) for f in self.finished)
+        return {
+            "wall": self.wall,
+            "delivered_tokens": toks,
+            "goodput": toks / max(self.wall, 1),
+            "finished": len(self.finished),
+            "submitted": self.submitted,
+            "drains": self.drains,
+            "readmitted": self.policy.readmitted,
+            "replicas": len(self.replicas),
+            "routed": dict(self.router.routed),
+        }

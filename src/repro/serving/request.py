@@ -4,6 +4,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, List, Optional
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Request:
@@ -21,6 +23,17 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     extra_embeds: Optional[Any] = None
+
+
+def validate_budget(req: "Request", n_prefix: int, cache_len: int) -> None:
+    """Reject a request whose prompt + modality prefix + generation budget
+    cannot fit one cache slot (shared by engine- and fleet-level submit:
+    a fleet must never route a request its engines would refuse)."""
+    plen = len(np.asarray(req.prompt))
+    if plen + n_prefix + req.max_new_tokens > cache_len:
+        raise ValueError(
+            f"request {req.rid}: prompt {plen} + prefix {n_prefix} "
+            f"+ gen {req.max_new_tokens} exceeds cache_len {cache_len}")
 
 
 @dataclasses.dataclass

@@ -18,6 +18,22 @@ assert "--xla_force_host_platform_device_count=8" in \
     os.environ.get("XLA_FLAGS", ""), "worker must run with 8 host devices"
 
 import jax
+
+# The mesh-equivalence divergence seen on some CPU hosts (ROADMAP
+# pre-existing) is NOT kernel reduction order: with jax<0.5's default
+# non-partitionable threefry, `init_model` jitted with out_shardings can
+# return different random bits on some mesh shapes — observed here as the
+# embed table diverging completely (max|diff| ~ 0.1, 100% of elements) on
+# a (4,2) mesh under P('model', None) while (8,1)/(1,8) matched, so no
+# tolerance is defensible.  Partitionable threefry is sharding-invariant
+# by construction (and the default from jax 0.5 on), which makes init
+# bit-identical across meshes; the remaining train-step comparisons below
+# then genuinely measure collective reassociation, at the documented
+# tolerances.  Scoped to this worker: flipping the flag changes every
+# jax.random stream, and the seeded RL/technique tests pin behavior under
+# the session default.
+jax.config.update("jax_threefry_partitionable", True)
+
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -159,16 +175,22 @@ def loss_fn(w, xb, yb):
 
 
 def smap_step(w, xw, yw):
-    def worker(w, xb, yb):
-        # jax>=0.8 shard_map: grad w.r.t. a REPLICATED input auto-inserts
-        # the psum over the mesh axis (the cotangent of an invariant value
-        # must be invariant) — the explicit all-reduce of the survey's
-        # Fig. 2 is what the transpose rule emits.  /W -> worker mean.
-        g = jax.grad(loss_fn)(w, xb[0], yb[0])
-        return g / W
+    # w enters SHARDED (each worker holds its own broadcast row) rather
+    # than replicated: grad w.r.t. a replicated input inside shard_map is
+    # version-dependent (jax<0.5 check_rep rejects the un-psummed
+    # cotangent; newer jax's transpose rule psums it automatically, which
+    # would double-count an explicit one).  With a per-worker row the
+    # gradient is unambiguously local on every version, and the survey's
+    # Fig. 2 all-reduce is the explicit psum below (/W -> worker mean).
+    wb = jnp.broadcast_to(w[None], (W,) + w.shape)
+
+    def worker(wb, xb, yb):
+        g = jax.grad(loss_fn)(wb[0], xb[0], yb[0])
+        return jax.lax.psum(g, "data") / W
+
     return shard_map(worker, mesh=mesh8,
-                     in_specs=(P(), P("data"), P("data")),
-                     out_specs=P())(w, xw, yw)
+                     in_specs=(P("data"), P("data"), P("data")),
+                     out_specs=P())(wb, xw, yw)
 
 
 g_sm = smap_step(w0, xw, yw)

@@ -1,0 +1,288 @@
+"""Elastic multi-replica serving: drain preserves delivered tokens and
+requeues remaining budget as prefix continuations; the fleet survives
+crash / hang-to-timeout / join / slow traces with zero dropped requests
+and outputs bit-identical to the failure-free run; the throughput-EMA
+router weights admission away from stragglers."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.elastic import FailureTrace, ServingDrainReadmit, TraceEvent
+from repro.models import model as MD
+from repro.serving import (Request, ServeEngine, ServeFleet, ServeProgram,
+                           ThroughputRouter)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    return get_config("qwen3-0.6b", smoke=True).with_(
+        param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_model(_cfg(), KEY)
+
+
+def _stream(n, cfg, seed=0, plens=(6, 10), gens=(4, 8)):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=int(rng.choice(plens))),
+                    max_new_tokens=int(rng.choice(gens)))
+            for i in range(n)]
+
+
+def _run_fleet(params, cfg, reqs, trace=None, replicas=3, slots=2,
+               cache_len=24):
+    fleet = ServeFleet(params, cfg, replicas=replicas, num_slots=slots,
+                       cache_len=cache_len, trace=trace)
+    fins = fleet.run(reqs)
+    return fleet, fins
+
+
+# ---------------------------------------------------------------------------
+# router unit tests (no model)
+# ---------------------------------------------------------------------------
+def test_router_weights_away_from_stragglers():
+    r = ThroughputRouter()
+    for _ in range(6):          # replica 1 observed at quarter speed
+        r.observe(0, 1.0)
+        r.observe(1, 0.25)
+        r.observe(2, 1.0)
+    # 8 requests into 12 free slots: admission order fills the fast
+    # replicas first, so the straggler ends with the smallest share
+    for i in range(8):
+        r.submit(Request(rid=i, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=2))
+    out = r.route({0: 4, 1: 4, 2: 4}, {0: 0, 1: 0, 2: 0})
+    assert len(out) == 8
+    counts = {w: sum(1 for _, rw in out if rw == w) for w in (0, 1, 2)}
+    assert counts[1] < counts[0] and counts[1] < counts[2]
+    assert counts[1] <= 2
+
+
+def test_router_fresh_joiner_assumed_nominal():
+    r = ThroughputRouter()
+    r.observe(0, 0.25)   # known straggler
+    r.submit(Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2))
+    # replica 7 never observed -> nominal rate, wins over the straggler
+    assert r.pick({0: 2, 7: 2}, {0: 0, 7: 0}) == 7
+    out = r.route({0: 2, 7: 2}, {0: 0, 7: 0})
+    assert out[0][1] == 7
+
+
+def test_router_requeue_front_preserves_order():
+    r = ThroughputRouter()
+    for i in (10, 11):
+        r.submit(Request(rid=i, prompt=np.zeros(2, np.int32),
+                         max_new_tokens=2))
+    conts = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new_tokens=2)
+             for i in (3, 5)]
+    r.requeue_front(conts)
+    assert [q.rid for q in r.queue] == [3, 5, 10, 11]
+
+
+# ---------------------------------------------------------------------------
+# drain + readmit policy
+# ---------------------------------------------------------------------------
+def test_engine_drain_preserves_harvested_tokens(params):
+    cfg = _cfg()
+    eng = ServeEngine(params, cfg, num_slots=2, cache_len=24)
+    reqs = _stream(3, cfg, seed=1, gens=(8,))
+    for q in reqs:
+        eng.submit(q)
+    for _ in range(4):   # a couple of admits + one decode chunk
+        eng.tick()
+    drained = eng.drain()
+    # every submitted-but-unfinished request comes back exactly once
+    assert sorted(d.request.rid for d in drained) == \
+        sorted(q.rid for q in reqs if q.rid not in
+               [f.rid for f in eng.finished])
+    # queued-but-unadmitted requests carry no emitted tokens
+    for d in drained:
+        assert len(d.emitted) <= d.request.max_new_tokens
+    # the engine is empty afterwards
+    assert eng.pool.num_active == 0 and eng.scheduler.pending == 0
+    assert eng.free_capacity == 2
+
+
+def test_drain_readmit_builds_prefix_continuations(params):
+    cfg = _cfg()
+    eng = ServeEngine(params, cfg, num_slots=2, cache_len=24)
+    reqs = _stream(2, cfg, seed=2, plens=(6,), gens=(12,))
+    for q in reqs:
+        eng.submit(q)
+    for _ in range(3):   # two admits + one decode chunk, budget unfinished
+        eng.tick()
+    drained = eng.drain()
+    assert any(d.emitted for d in drained)  # some tokens were delivered
+    policy = ServingDrainReadmit()
+    conts = policy.readmit(drained)
+    assert [c.rid for c in conts] == sorted(d.request.rid for d in drained)
+    by_rid = {d.request.rid: d for d in drained}
+    for c in conts:
+        d = by_rid[c.rid]
+        if d.emitted:
+            # prompt grew by the delivered prefix; budget shrank to match
+            assert len(np.asarray(c.prompt)) == \
+                len(np.asarray(d.request.prompt)) + len(d.emitted)
+            assert c.max_new_tokens == \
+                d.request.max_new_tokens - len(d.emitted)
+            np.testing.assert_array_equal(
+                np.asarray(c.prompt)[-len(d.emitted):], d.emitted)
+        else:
+            assert c is d.request  # nothing delivered: verbatim re-admit
+
+
+def test_stitch_reconstructs_full_output():
+    from repro.serving.request import FinishedRequest
+    from repro.serving.engine import DrainedRequest
+
+    orig = Request(rid=4, prompt=np.arange(5, dtype=np.int32),
+                   max_new_tokens=6)
+    policy = ServingDrainReadmit()
+    [cont] = policy.readmit([DrainedRequest(orig, [7, 8])])
+    assert cont.max_new_tokens == 4
+    fin = FinishedRequest(rid=4, prompt_len=7, tokens=[9, 10, 11, 12],
+                          finish_reason="length", admitted_tick=1,
+                          finished_tick=9)
+    out = policy.stitch(fin)
+    assert out.tokens == [7, 8, 9, 10, 11, 12]
+    assert out.prompt_len == 5          # the ORIGINAL prompt length
+    assert not policy.originals and not policy.emitted  # ledger cleared
+
+
+# ---------------------------------------------------------------------------
+# fleet end-to-end under traces
+# ---------------------------------------------------------------------------
+def test_fleet_failure_free_matches_single_engine(params):
+    """N replicas with a router reorder WHEN requests run, never WHAT they
+    compute: outputs match a single continuous-batching engine."""
+    cfg = _cfg()
+    single = ServeEngine(params, cfg, num_slots=2, cache_len=24)
+    ref = {f.rid: f.tokens for f in single.run(_stream(8, cfg))}
+    fleet, fins = _run_fleet(params, cfg, _stream(8, cfg))
+    assert len(fins) == 8
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+    assert fleet.stats()["drains"] == 0
+
+
+def test_fleet_replica_crash_drains_and_readmits(params):
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace.single_failure(4, worker=1)
+    fleet, fins = _run_fleet(params, cfg, _stream(10, cfg), trace=trace)
+    st = fleet.stats()
+    assert st["drains"] == 1 and st["readmitted"] >= 1
+    assert st["finished"] == 10                      # zero dropped
+    assert 1 not in fleet.replicas                   # the dead replica
+    for a, b in zip(free, fins):
+        assert a.rid == b.rid and a.tokens == b.tokens  # bit-identical
+
+
+def test_fleet_crash_right_after_admission_reprefills(params):
+    """Death one tick in: nothing harvested yet, requests re-admit
+    verbatim and still complete identically."""
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(6, cfg))
+    fleet, fins = _run_fleet(params, cfg, _stream(6, cfg),
+                             trace=FailureTrace.single_failure(1, worker=0))
+    assert fleet.stats()["finished"] == 6
+    for a, b in zip(free, fins):
+        assert a.tokens == b.tokens
+
+
+def test_fleet_hang_escalates_to_timeout_drain(params):
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(3, "hang", 2)])
+    fleet, fins = _run_fleet(params, cfg, _stream(10, cfg), trace=trace)
+    st = fleet.stats()
+    assert st["drains"] == 1 and st["finished"] == 10
+    deaths = [t for t in fleet.membership.workers.values()
+              if t.status == "dead"]
+    assert len(deaths) == 1 and deaths[0].wid == 2
+    for a, b in zip(free, fins):
+        assert a.tokens == b.tokens
+
+
+def test_fleet_hang_recover_before_timeout_is_free(params):
+    cfg = _cfg()
+    free_fleet, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(3, "hang", 2),
+                          TraceEvent(4, "recover", 2)])
+    fleet, fins = _run_fleet(params, cfg, _stream(10, cfg), trace=trace)
+    st = fleet.stats()
+    assert st["drains"] == 0 and st["finished"] == 10
+    assert len(fleet.replicas) == 3
+    for a, b in zip(free, fins):
+        assert a.tokens == b.tokens
+    # a one-tick stall costs at most a tick or two of wall time
+    assert st["wall"] <= free_fleet.stats()["wall"] + 3
+
+
+def test_fleet_join_absorbs_backlog(params):
+    """A scale-up join lands while backlog is deep; the joiner must take
+    admissions (nominal routing score, shared compiled program)."""
+    cfg = _cfg()
+    trace = FailureTrace([TraceEvent(2, "join", 2)])
+    fleet = ServeFleet(params, cfg, replicas=2, num_slots=2, cache_len=24,
+                       trace=trace)
+    fins = fleet.run(_stream(12, cfg))
+    st = fleet.stats()
+    assert st["finished"] == 12
+    assert len(fleet.replicas) == 3
+    assert st["routed"].get(2, 0) > 0    # joiner absorbed queue backlog
+    # joiner shares the fleet's compiled program (no per-replica recompile)
+    assert fleet.replicas[2].engine.program is fleet.program
+
+
+def test_fleet_slow_replica_gets_less_work(params):
+    cfg = _cfg()
+    trace = FailureTrace([TraceEvent(1, "slow", 0, 0.2)])
+    fleet, fins = _run_fleet(params, cfg, _stream(16, cfg, gens=(8,)),
+                             trace=trace)
+    st = fleet.stats()
+    assert st["finished"] == 16
+    routed = st["routed"]
+    # the straggler ends well below a fair (uniform) share
+    assert routed.get(0, 0) < routed[1] and routed.get(0, 0) < routed[2]
+
+
+def test_fleet_all_replicas_dead_raises(params):
+    cfg = _cfg()
+    trace = FailureTrace([TraceEvent(1, "fail", 0), TraceEvent(1, "fail", 1),
+                          TraceEvent(1, "fail", 2)])
+    fleet = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                       trace=trace)
+    with pytest.raises(RuntimeError, match="all replicas dead"):
+        fleet.run(_stream(8, cfg))
+
+
+def test_fleet_rejects_oversized_request(params):
+    cfg = _cfg()
+    fleet = ServeFleet(params, cfg, replicas=2, num_slots=1, cache_len=8)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        fleet.submit(Request(rid=0, prompt=np.zeros(6, np.int32),
+                             max_new_tokens=4))
+
+
+def test_shared_program_across_engines(params):
+    """Two engines on one ServeProgram produce identical outputs to two
+    private-program engines (the compiled half carries no request state)."""
+    cfg = _cfg()
+    prog = ServeProgram(cfg, cache_len=24)
+    a = ServeEngine(params, cfg, num_slots=2, cache_len=24, program=prog)
+    b = ServeEngine(params, cfg, num_slots=2, cache_len=24, program=prog)
+    solo = ServeEngine(params, cfg, num_slots=2, cache_len=24)
+    ref = {f.rid: f.tokens for f in solo.run(_stream(6, cfg, seed=5))}
+    for f in a.run(_stream(6, cfg, seed=5)):
+        assert f.tokens == ref[f.rid]
+    for f in b.run(_stream(6, cfg, seed=5)):
+        assert f.tokens == ref[f.rid]
+    with pytest.raises(ValueError, match="cache_len"):
+        ServeEngine(params, cfg, num_slots=2, cache_len=16, program=prog)
