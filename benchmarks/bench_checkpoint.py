@@ -1,0 +1,185 @@
+"""Checkpoint overhead: blocking vs async saves at the elastic cadence.
+
+Simulates the elastic trainer's steady state — a fixed compute step with a
+checkpoint every `cadence` steps — three ways on the same device state:
+
+  none     : no checkpoints (the compute floor)
+  blocking : `save_checkpoint` on the caller (device_get + serialize +
+             write all steal train time)
+  async    : `AsyncCheckpointer` (caller pays only the host snapshot; the
+             writer thread overlaps serialization/IO with the next steps)
+
+The metric is **steal**: caller-thread seconds spent inside save calls
+(for async this includes the final `wait()` barrier, so a writer that
+can't keep up with the cadence is charged honestly).  Acceptance bound,
+asserted here and gated in CI via `check_regression.py`:
+
+    steal(async) < 20% of steal(blocking)        (savings_frac >= 0.8)
+
+The async saver runs with fsync=False to match the blocking path
+syscall-for-syscall (same bytes, same writes, just off-thread); both
+paths produce byte-identical checkpoints (tests/test_async_ckpt.py).
+
+  PYTHONPATH=src python benchmarks/bench_checkpoint.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, save_checkpoint
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def make_state(n_leaves: int, total_mb: float) -> dict:
+    """A params-shaped pytree totaling `total_mb` MB of fp32."""
+    per = max(1, int(total_mb * 1024 * 1024 / 4 / n_leaves))
+    key = jax.random.PRNGKey(0)
+    state = {}
+    for i in range(n_leaves):
+        key, k = jax.random.split(key)
+        state[f"layer_{i:02d}"] = jax.random.normal(k, (per,), jnp.float32)
+    return state
+
+
+def make_compute(target_ms: float):
+    """A jitted step calibrated to ~target_ms so the async writer has a
+    realistic window to overlap into."""
+    @jax.jit
+    def f(x):
+        return x @ x * 0.999 + 0.001
+
+    x = jnp.eye(384, dtype=jnp.float32)
+    f(x).block_until_ready()                       # compile
+    timings = []
+    for _ in range(10):
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        timings.append(time.perf_counter() - t0)
+    per_call = min(timings)                        # min: least-noise floor
+    reps = max(1, round(target_ms / 1e3 / max(per_call, 1e-6)))
+
+    def step(x):
+        for _ in range(reps):
+            x = f(x)
+        x.block_until_ready()
+        return x
+
+    return step
+
+
+def run_scenario(kind: str, state, step, *, steps: int, cadence: int,
+                 keep_last: int = 3) -> dict:
+    """One training run; returns total wall time + caller-side steal."""
+    x = jnp.eye(384, dtype=jnp.float32)
+    steal = 0.0
+    saves = 0
+    with tempfile.TemporaryDirectory() as d:
+        saver = (AsyncCheckpointer(d, keep_last=keep_last, fsync=False)
+                 if kind == "async" else None)
+        t0 = time.perf_counter()
+        for s in range(steps):
+            x = step(x)
+            if kind != "none" and (s + 1) % cadence == 0:
+                ts = time.perf_counter()
+                if saver is not None:
+                    saver.save(s + 1, state)
+                else:
+                    save_checkpoint(d, s + 1, state, keep_last=keep_last)
+                steal += time.perf_counter() - ts
+                saves += 1
+        if saver is not None:
+            ts = time.perf_counter()
+            saver.wait()               # charge any writer lag to the caller
+            steal += time.perf_counter() - ts
+        total = time.perf_counter() - t0
+        last = latest_step(d)
+        if saver is not None:
+            saver.close()
+    if kind != "none":
+        assert last == steps - steps % cadence or last == steps, \
+            f"{kind}: expected final checkpoint, found step {last}"
+    return {"total_s": total, "steal_s": steal, "saves": saves}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=float, default=64.0,
+                    help="checkpointed state size (fp32 MB)")
+    ap.add_argument("--leaves", type=int, default=8)
+    # steps deliberately NOT a multiple of cadence: the trailing compute
+    # after the last save is the steady state being measured — at the
+    # elastic cadence a save always overlaps subsequent steps, and the
+    # final wait() only stalls if the writer can't keep up
+    ap.add_argument("--steps", type=int, default=28)
+    ap.add_argument("--cadence", type=int, default=5,
+                    help="save every N steps (the elastic cadence)")
+    ap.add_argument("--step-ms", type=float, default=60.0,
+                    help="calibrated compute per step")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed passes per path; best (min steal) reported")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller state, fewer steps")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.size_mb, args.steps, args.cadence, args.repeats = 24.0, 14, 3, 2
+
+    state = make_state(args.leaves, args.size_mb)
+    jax.block_until_ready(state)
+    step = make_compute(args.step_ms)
+    kw = dict(steps=args.steps, cadence=args.cadence)
+
+    # warm-up pass per path (first-save imports, allocator effects)
+    for kind in ("none", "blocking", "async"):
+        run_scenario(kind, state, step, **kw)
+
+    none = min((run_scenario("none", state, step, **kw)
+                for _ in range(args.repeats)), key=lambda r: r["total_s"])
+    blocking = min((run_scenario("blocking", state, step, **kw)
+                    for _ in range(args.repeats)),
+                   key=lambda r: r["steal_s"])
+    async_ = min((run_scenario("async", state, step, **kw)
+                  for _ in range(args.repeats)), key=lambda r: r["steal_s"])
+
+    savings = 1.0 - async_["steal_s"] / max(blocking["steal_s"], 1e-9)
+    per_save_block = blocking["steal_s"] / max(blocking["saves"], 1)
+    per_save_async = async_["steal_s"] / max(async_["saves"], 1)
+
+    print(f"state={args.size_mb:.0f}MB x {args.leaves} leaves, "
+          f"{args.steps} steps, save every {args.cadence}")
+    print(f"none     : total {none['total_s']:.3f}s")
+    print(f"blocking : total {blocking['total_s']:.3f}s  "
+          f"steal {blocking['steal_s']*1e3:7.1f}ms "
+          f"({per_save_block*1e3:.1f}ms/save)")
+    print(f"async    : total {async_['total_s']:.3f}s  "
+          f"steal {async_['steal_s']*1e3:7.1f}ms "
+          f"({per_save_async*1e3:.1f}ms/save)")
+    print(f"async steals {100 * (1 - savings):.1f}% of the blocking cost "
+          f"(savings_frac={savings:.3f})")
+
+    assert savings >= 0.8, (
+        f"async checkpoint steals {100 * (1 - savings):.1f}% of the "
+        f"blocking save cost (bound: <20%)")
+
+    report = {
+        "size_mb": args.size_mb, "steps": args.steps,
+        "cadence": args.cadence,
+        "none": none, "blocking": blocking,
+        "async": {**async_, "savings_frac": savings},
+    }
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "checkpoint.json"
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,12 @@ GATES = {
         ("scenarios.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
         ("scenarios.churn.goodput_ratio", DEFAULT_MIN_RATIO),
     ],
+    "checkpoint": [
+        # fraction of the blocking save cost the async path gives back to
+        # the train loop (bench_checkpoint.py also hard-asserts >= 0.8,
+        # i.e. async steals < 20% of what a blocking save costs)
+        ("async.savings_frac", DEFAULT_MIN_RATIO),
+    ],
 }
 
 

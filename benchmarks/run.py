@@ -14,6 +14,7 @@ Sections:
   serving    : continuous vs static batching on a mixed-length stream
   elastic    : recovery latency + goodput under failure traces
   elastic_serving : multi-replica fleet drain/re-admit under failure traces
+  checkpoint : blocking vs async checkpoint saves at the elastic cadence
   roofline   : §Roofline report from benchmarks/results/*.json
 """
 from __future__ import annotations
@@ -30,7 +31,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SECTIONS = ["techniques", "classic", "rl", "pipeline", "kernels",
             "moe_routing", "serving", "elastic", "elastic_serving",
-            "roofline"]
+            "checkpoint", "roofline"]
 
 
 def _banner(name: str) -> None:
@@ -42,6 +43,7 @@ _MODULES = {
     "rl": "bench_rl", "kernels": "bench_kernels",
     "moe_routing": "bench_moe_routing", "serving": "bench_serving",
     "elastic": "bench_elastic", "elastic_serving": "bench_elastic_serving",
+    "checkpoint": "bench_checkpoint",
     "roofline": "roofline",
 }
 _ARGV = {"roofline": ["--mesh", "both"]}

@@ -1,2 +1,4 @@
 from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
                                    latest_step, gc_checkpoints, sweep_tmp)
+from repro.checkpoint.async_ckpt import (AsyncCheckpointer,
+                                         AsyncCheckpointError, FAILPOINTS)

@@ -9,6 +9,16 @@ Sharded arrays: leaves are fetched with ``jax.device_get`` which
 reassembles a fully-addressable sharded array; on restore the caller
 passes target shardings and leaves are ``device_put`` directly to their
 shards (no host-side full copy per device).
+
+The write path is built from stages shared with the async writer
+(`checkpoint/async_ckpt.py`) — per-leaf serialization (`iter_snapshot`),
+manifest layout, tmp sweep, atomic commit (`commit_staged`), GC — so both
+savers produce byte-identical checkpoints (pinned by byte-equality tests
+in tests/test_async_ckpt.py and tests/test_launchers.py).  They differ
+only in data flow: the blocking `save_checkpoint` STREAMS one leaf at a
+time (peak host memory ~ one leaf), while the async path STAGES the full
+snapshot first (`host_snapshot` + `write_staged`) — that extra host copy
+is exactly what buys the non-blocking save.
 """
 from __future__ import annotations
 
@@ -16,7 +26,7 @@ import json
 import os
 import pathlib
 import shutil
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,24 +64,39 @@ def _load_leaf(step_dir: pathlib.Path, key: str, manifest: Dict) -> Any:
 
 
 def sweep_tmp(ckpt_dir: str) -> list:
-    """Remove orphaned ``.tmp_step_*`` dirs (left by killed runs).
+    """Clean up debris of killed runs: remove orphaned ``.tmp_step_*``
+    dirs, and resolve ``.old_step_*`` dirs (a checkpoint displaced by
+    `commit_staged` mid-overwrite) — rescued back into place if the
+    replacement never committed, deleted if it did.
 
     Assumes the single-writer model this codebase uses everywhere (one
     trainer owns a ckpt_dir): a tmp dir is only live inside this
-    process's own `save_checkpoint` call, which creates and renames it
-    synchronously.  Two processes saving into the same dir would sweep
-    each other's in-flight tmp dirs."""
+    process's own save call (blocking, or the async writer thread, which
+    is also the only caller of this function in that mode).  Two
+    processes saving into the same dir would sweep each other's
+    in-flight tmp dirs."""
     base = pathlib.Path(ckpt_dir)
     swept = []
     if base.exists():
         for p in base.glob(".tmp_step_*"):
             shutil.rmtree(p)
             swept.append(str(p))
+        for p in base.glob(".old_step_*"):
+            dest = base / p.name[len(".old_"):]
+            if dest.exists():      # replacement committed: old copy is junk
+                shutil.rmtree(p)
+            else:                  # killed mid-replace: the old copy IS the
+                os.rename(p, dest)  # newest committed state — put it back
+            swept.append(str(p))
     return swept
 
 
-def gc_checkpoints(ckpt_dir: str, keep_last: int) -> list:
-    """Delete all but the newest `keep_last` complete checkpoints."""
+def gc_checkpoints(ckpt_dir: str, keep_last: int,
+                   on_remove: Optional[Callable[[str], None]] = None) -> list:
+    """Delete all but the newest `keep_last` complete checkpoints.
+
+    `on_remove(path)` fires after each directory is deleted — the async
+    writer's mid-GC failure-injection point rides on it."""
     base = pathlib.Path(ckpt_dir)
     if keep_last <= 0 or not base.exists():
         return []
@@ -82,7 +107,108 @@ def gc_checkpoints(ckpt_dir: str, keep_last: int) -> list:
     for _, p in steps[:-keep_last]:
         shutil.rmtree(p)
         removed.append(str(p))
+        if on_remove is not None:
+            on_remove(str(p))
     return removed
+
+
+# ---------------------------------------------------------------------------
+# The three write stages (shared by the blocking and async savers)
+# ---------------------------------------------------------------------------
+def iter_snapshot(tree: Pytree):
+    """Yield (key, host numpy leaf, logical dtype) one leaf at a time.
+
+    Each leaf is `jax.device_get` on the calling thread, so a consumed
+    entry is immune to later donation/overwrite of the device buffer."""
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or true_dtype in ("bfloat16",):
+            # numpy can't round-trip ml_dtypes (bf16 etc.): store fp32,
+            # recast on restore from the manifest's logical dtype
+            arr = arr.astype(np.float32)
+        yield key, arr, true_dtype
+
+
+def host_snapshot(step: int, tree: Pytree, metadata: Optional[Dict] = None
+                  ) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Stage the WHOLE tree to host: ({key: numpy leaf}, manifest).
+
+    This holds a full host copy at once — the price of handing the write
+    to a background thread; the blocking saver streams instead."""
+    flat_host: Dict[str, np.ndarray] = {}
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for key, arr, true_dtype in iter_snapshot(tree):
+        flat_host[key] = arr
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": true_dtype}
+    return flat_host, manifest
+
+
+def _fsync_path(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_staged(tmp: pathlib.Path, flat_host: Dict[str, np.ndarray],
+                 manifest: Dict, *, fsync: bool = False) -> None:
+    """Serialize a host snapshot into an (already created) tmp dir."""
+    for key, arr in flat_host.items():
+        np.save(tmp / f"{key}.npy", arr)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if fsync:
+        fsync_staged(tmp)
+
+
+def fsync_staged(tmp: pathlib.Path) -> None:
+    """Flush every staged file + the dir itself (durability before the
+    rename makes the checkpoint visible)."""
+    for p in tmp.iterdir():
+        _fsync_path(p)
+    _fsync_path(tmp)
+
+
+def stage_dirs(ckpt_dir: str, step: int
+               ) -> Tuple[pathlib.Path, pathlib.Path]:
+    """Open the staging area for one save (both savers' prologue):
+    sweeps debris, creates the tmp dir, returns (tmp, final)."""
+    base = pathlib.Path(ckpt_dir)
+    final = base / f"step_{step:08d}"
+    tmp = base / f".tmp_step_{step:08d}"
+    base.mkdir(parents=True, exist_ok=True)
+    sweep_tmp(ckpt_dir)
+    tmp.mkdir(parents=True)
+    return tmp, final
+
+
+def commit_staged(tmp: pathlib.Path, final: pathlib.Path,
+                  *, fsync: bool = False,
+                  failpoint: Optional[Callable[[str], None]] = None) -> None:
+    """The commit point: atomic rename tmp -> final.  Before the rename
+    the checkpoint is invisible (latest_step/restore ignore tmp dirs);
+    after it the checkpoint is complete — there is no partial state.
+
+    Overwriting an existing step never deletes it before the new copy
+    lands: the old dir is DISPLACED by rename to ``.old_<name>`` (so the
+    exposure is a two-rename window, not an rmtree), and a kill inside
+    that window is repaired by `sweep_tmp`, which renames the displaced
+    copy back.  `failpoint("mid_replace")` injects exactly there."""
+    old = None
+    if final.exists():
+        old = final.parent / f".old_{final.name}"
+        if old.exists():
+            shutil.rmtree(old)
+        os.rename(final, old)
+        if failpoint is not None:
+            failpoint("mid_replace")
+    os.rename(tmp, final)
+    if fsync:
+        _fsync_path(final.parent)
+    if old is not None:
+        shutil.rmtree(old)
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
@@ -91,28 +217,14 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
     """keep_last > 0 enables retention: after a successful save, only the
     newest `keep_last` checkpoints survive.  Every save also sweeps
     orphaned tmp dirs from killed runs (any step, not just this one)."""
-    base = pathlib.Path(ckpt_dir)
-    final = base / f"step_{step:08d}"
-    tmp = base / f".tmp_step_{step:08d}"
-    base.mkdir(parents=True, exist_ok=True)
-    sweep_tmp(ckpt_dir)
-    tmp.mkdir(parents=True)
-    flat = _flatten(tree)
+    tmp, final = stage_dirs(ckpt_dir, step)
     manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
-    for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
-        true_dtype = str(arr.dtype)
-        if arr.dtype.kind == "V" or true_dtype in ("bfloat16",):
-            # numpy can't round-trip ml_dtypes (bf16 etc.): store fp32,
-            # recast on restore from the manifest's logical dtype
-            arr = arr.astype(np.float32)
+    for key, arr, true_dtype in iter_snapshot(tree):  # stream, leaf by leaf
         np.save(tmp / f"{key}.npy", arr)
         manifest["leaves"][key] = {"shape": list(arr.shape),
                                    "dtype": true_dtype}
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-    if final.exists():
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    commit_staged(tmp, final)
     if keep_last:
         gc_checkpoints(ckpt_dir, keep_last)
     return str(final)

@@ -146,11 +146,17 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 ckpt_every: int = 10, keep_last: int = 3,
                 heartbeat_timeout: int = 3, restore_penalty: float = 2.0,
                 straggle_threshold: float = 0.5,
-                easgd_rho: float = 0.5) -> ElasticRunResult:
+                easgd_rho: float = 0.5,
+                async_ckpt: bool = False) -> ElasticRunResult:
     """Run `steps` elastic training rounds under a failure trace.
 
     restore_penalty: simulated restore cost, in units of one nominal
     (failure-free, uniform-split) step time.
+
+    async_ckpt=True moves checkpoint writes onto a background writer
+    (`AsyncCheckpointer`); recovery waits for the last *committed* step,
+    so the training trajectory — losses, rewind targets, goodput — is
+    bit-identical to blocking saves (tests/test_elastic.py pins this).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
@@ -166,12 +172,17 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
 
     # ---- per-mode state -------------------------------------------------
     ids = list(membership.alive())
+    stacked_ckpt = None
     if mode == "sync":
         params = problem.init_params()
         opt_state = opt.init(params)
-        policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last)
+        policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last,
+                                       async_save=async_ckpt)
         policy.checkpoint(0, params, opt_state)
     else:
+        if async_ckpt and ckpt_dir:
+            from repro.checkpoint import AsyncCheckpointer
+            stacked_ckpt = AsyncCheckpointer(ckpt_dir, keep_last=keep_last)
         p0 = problem.init_params()
         params_w = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p[None], (workers,) + p.shape), p0)
@@ -193,111 +204,126 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
     train_step = 0
     wall = 0
 
-    while train_step < steps:
-        transitions = membership.advance(wall)
-        all_transitions.extend(transitions)
-        deaths = [t for t in transitions if t.kind == "death"]
-        joins = [t for t in transitions if t.kind == "join"]
-        for t in transitions:
-            if t.kind == "rate":
-                # telemetry: the slow worker's observed samples/sec drops
-                monitor.observe(t.worker, nominal_t, nominal_t / t.rate)
-        for t in deaths:
-            monitor.forget(t.worker)
+    try:
+        while train_step < steps:
+            transitions = membership.advance(wall)
+            all_transitions.extend(transitions)
+            deaths = [t for t in transitions if t.kind == "death"]
+            joins = [t for t in transitions if t.kind == "join"]
+            for t in transitions:
+                if t.kind == "rate":
+                    # telemetry: the slow worker's observed samples/sec drops
+                    monitor.observe(t.worker, nominal_t, nominal_t / t.rate)
+            for t in deaths:
+                monitor.forget(t.worker)
 
-        new_ids = list(membership.alive())
-        if not new_ids:
-            raise RuntimeError(f"wall step {wall}: all workers dead")
+            new_ids = list(membership.alive())
+            if not new_ids:
+                raise RuntimeError(f"wall step {wall}: all workers dead")
 
-        if deaths or joins:
-            if mode == "sync":
-                if deaths:  # the in-flight collective died: restore+rewind
-                    params, opt_state, restored = policy.recover(
-                        params, opt_state)
-                    lost = train_step - restored
-                    pause = restore_penalty * nominal_t
-                    sim_time += pause
+            if deaths or joins:
+                if mode == "sync":
+                    if deaths:  # the in-flight collective died: restore+rewind
+                        params, opt_state, restored = policy.recover(
+                            params, opt_state)
+                        lost = train_step - restored
+                        pause = restore_penalty * nominal_t
+                        sim_time += pause
+                        for d in deaths:
+                            rec = RecoveryRecord(wall, d.worker, d.cause, lost)
+                            recoveries.append(rec)
+                            pending.append((rec, train_step, sim_time - pause))
+                        train_step = restored
+                elif mode == "local_sgd":
+                    st = policy.apply({"params": params_w, "opt": opt_w},
+                                      ids, new_ids)
+                    params_w, opt_w = st["params"], st["opt"]
                     for d in deaths:
-                        rec = RecoveryRecord(wall, d.worker, d.cause, lost)
-                        recoveries.append(rec)
-                        pending.append((rec, train_step, sim_time - pause))
-                    train_step = restored
-            elif mode == "local_sgd":
-                st = policy.apply({"params": params_w, "opt": opt_w},
-                                  ids, new_ids)
-                params_w, opt_w = st["params"], st["opt"]
-                for d in deaths:
-                    recoveries.append(
-                        RecoveryRecord(wall, d.worker, d.cause, 0))
-            else:  # easgd
-                params_w, center = policy.apply(params_w, center,
-                                                ids, new_ids)
-                for d in deaths:
-                    recoveries.append(
-                        RecoveryRecord(wall, d.worker, d.cause, 0))
-        ids = new_ids
+                        recoveries.append(
+                            RecoveryRecord(wall, d.worker, d.cause, 0))
+                else:  # easgd
+                    params_w, center = policy.apply(params_w, center,
+                                                    ids, new_ids)
+                    for d in deaths:
+                        recoveries.append(
+                            RecoveryRecord(wall, d.worker, d.cause, 0))
+            ids = new_ids
 
-        rates = membership.rates()
+            rates = membership.rates()
 
-        # ---- one training round ----------------------------------------
+            # ---- one training round ----------------------------------------
+            if mode == "sync":
+                # straggler mitigation: DBS split only on the sync barrier
+                # (local rounds keep uniform work; see ROADMAP open items)
+                split, slow = replan_on_straggle(
+                    monitor, ids, global_batch, threshold=straggle_threshold)
+                if slow:
+                    replans += 1
+                batch = problem.stack(ids, train_step, split)
+                batches_w = {k: jnp.asarray(v) for k, v in batch.items()}
+                losses_w, grads_w = DP.per_worker_grads(
+                    loss_fn, params, batches_w)
+                wts = jnp.asarray([split[w] for w in ids], jnp.float32)
+                wts = wts / jnp.sum(wts)
+                g = jax.tree_util.tree_map(
+                    lambda gw: jnp.tensordot(wts, gw.astype(jnp.float32), 1),
+                    grads_w)
+                params, opt_state = opt.update(g, opt_state, params)
+                losses[train_step] = float(jnp.dot(wts, losses_w))
+                sim_time += step_time(split, rates)
+                if ckpt_every and (train_step + 1) % ckpt_every == 0:
+                    policy.checkpoint(train_step + 1, params, opt_state)
+            else:
+                # rounded (not floored) so a death doesn't step the per-worker
+                # allocation and conflate quantization with failure cost
+                n = max(1, round(global_batch / (len(ids) * K)))
+                uniform = {w: n for w in ids}
+                samples_done += len(ids) * K * n
+                batch = problem.stack(ids, train_step, uniform, K=K)
+                batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
+                if mode == "local_sgd":
+                    params_w, opt_w, m = DP.local_sgd_round(
+                        loss_fn, params_w, opt, opt_w, batches_wk)
+                else:
+                    params_w, center, m = DP.easgd_round(
+                        loss_fn, params_w, center, batches_wk, easgd_cfg)
+                losses[train_step] = float(m["loss"])
+                sim_time += step_time({w: uniform[w] * K for w in ids}, rates)
+                if ckpt_dir and ckpt_every and (train_step + 1) % ckpt_every == 0:
+                    stacked = ({"params": params_w, "opt": opt_w}
+                               if mode == "local_sgd" else {"params": params_w})
+                    rep = None if mode == "local_sgd" else {"center": center}
+                    save_stacked(ckpt_dir, train_step + 1, stacked, ids,
+                                 replicated=rep, keep_last=keep_last,
+                                 checkpointer=stacked_ckpt)
+
+            train_step += 1
+            wall += 1
+
+            # close out recovery latency once progress is regained
+            still = []
+            for rec, goal, t0 in pending:
+                if train_step >= goal:
+                    rec.latency = sim_time - t0
+                else:
+                    still.append((rec, goal, t0))
+            pending = still
+
+        for rec, goal, t0 in pending:  # ended before regaining progress
+            rec.latency = sim_time - t0
+        # barrier before reporting: every handed-over save is durable
+        # (wait raises if a background save failed)
         if mode == "sync":
-            # straggler mitigation: DBS split only on the sync barrier
-            # (local rounds keep uniform work; see ROADMAP open items)
-            split, slow = replan_on_straggle(
-                monitor, ids, global_batch, threshold=straggle_threshold)
-            if slow:
-                replans += 1
-            batch = problem.stack(ids, train_step, split)
-            batches_w = {k: jnp.asarray(v) for k, v in batch.items()}
-            losses_w, grads_w = DP.per_worker_grads(
-                loss_fn, params, batches_w)
-            wts = jnp.asarray([split[w] for w in ids], jnp.float32)
-            wts = wts / jnp.sum(wts)
-            g = jax.tree_util.tree_map(
-                lambda gw: jnp.tensordot(wts, gw.astype(jnp.float32), 1),
-                grads_w)
-            params, opt_state = opt.update(g, opt_state, params)
-            losses[train_step] = float(jnp.dot(wts, losses_w))
-            sim_time += step_time(split, rates)
-            if ckpt_every and (train_step + 1) % ckpt_every == 0:
-                policy.checkpoint(train_step + 1, params, opt_state)
-        else:
-            # rounded (not floored) so a death doesn't step the per-worker
-            # allocation and conflate quantization with failure cost
-            n = max(1, round(global_batch / (len(ids) * K)))
-            uniform = {w: n for w in ids}
-            samples_done += len(ids) * K * n
-            batch = problem.stack(ids, train_step, uniform, K=K)
-            batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
-            if mode == "local_sgd":
-                params_w, opt_w, m = DP.local_sgd_round(
-                    loss_fn, params_w, opt, opt_w, batches_wk)
-            else:
-                params_w, center, m = DP.easgd_round(
-                    loss_fn, params_w, center, batches_wk, easgd_cfg)
-            losses[train_step] = float(m["loss"])
-            sim_time += step_time({w: uniform[w] * K for w in ids}, rates)
-            if ckpt_dir and ckpt_every and (train_step + 1) % ckpt_every == 0:
-                stacked = ({"params": params_w, "opt": opt_w}
-                           if mode == "local_sgd" else {"params": params_w})
-                rep = None if mode == "local_sgd" else {"center": center}
-                save_stacked(ckpt_dir, train_step + 1, stacked, ids,
-                             replicated=rep, keep_last=keep_last)
-
-        train_step += 1
-        wall += 1
-
-        # close out recovery latency once progress is regained
-        still = []
-        for rec, goal, t0 in pending:
-            if train_step >= goal:
-                rec.latency = sim_time - t0
-            else:
-                still.append((rec, goal, t0))
-        pending = still
-
-    for rec, goal, t0 in pending:  # run ended before regaining progress
-        rec.latency = sim_time - t0
+            policy.wait()
+        elif stacked_ckpt is not None:
+            stacked_ckpt.wait()
+    finally:
+        # never leak the writer thread (or a save still mutating
+        # ckpt_dir) past an exception unwind; these closes never mask it
+        if mode == "sync":
+            policy.close()
+        elif stacked_ckpt is not None:
+            stacked_ckpt.close(wait=False)
 
     if mode == "sync":
         final_params = params
@@ -338,7 +364,9 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
     membership = Membership(W0, trace)
     monitor = ThroughputMonitor()
     policy = SyncCheckpointRestore(args.ckpt_dir,
-                                   keep_last=args.keep_last)
+                                   keep_last=args.keep_last,
+                                   async_save=getattr(args, "async_ckpt",
+                                                      False))
     ckpt_every = args.ckpt_every or 20
     policy.checkpoint(step0, params, opt_state, {"arch": args.arch})
 
@@ -358,54 +386,59 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
     recoveries: List[RecoveryRecord] = []
     train_step, wall = step0, 0
 
-    while train_step < step0 + args.steps:
-        transitions = membership.advance(wall)
-        deaths = [t for t in transitions if t.kind == "death"]
-        for t in transitions:
-            if t.kind == "rate":
-                monitor.observe(t.worker, 1.0, 1.0 / t.rate)
-        for t in deaths:
-            monitor.forget(t.worker)
-        if deaths:
-            params, opt_state, restored = policy.recover(params, opt_state)
-            lost = train_step - restored
-            for d in deaths:
-                recoveries.append(
-                    RecoveryRecord(wall, d.worker, d.cause, lost))
-            print(f"[elastic] wall {wall}: worker(s) "
-                  f"{[d.worker for d in deaths]} died ({deaths[0].cause}); "
-                  f"restored step {restored} (lost {lost} steps), "
-                  f"{len(membership.alive())} survivors", flush=True)
-            train_step = restored
+    try:
+        while train_step < step0 + args.steps:
+            transitions = membership.advance(wall)
+            deaths = [t for t in transitions if t.kind == "death"]
+            for t in transitions:
+                if t.kind == "rate":
+                    monitor.observe(t.worker, 1.0, 1.0 / t.rate)
+            for t in deaths:
+                monitor.forget(t.worker)
+            if deaths:
+                params, opt_state, restored = policy.recover(params, opt_state)
+                lost = train_step - restored
+                for d in deaths:
+                    recoveries.append(
+                        RecoveryRecord(wall, d.worker, d.cause, lost))
+                print(f"[elastic] wall {wall}: worker(s) "
+                      f"{[d.worker for d in deaths]} died ({deaths[0].cause}); "
+                      f"restored step {restored} (lost {lost} steps), "
+                      f"{len(membership.alive())} survivors", flush=True)
+                train_step = restored
 
-        alive = membership.alive()
-        if not alive:
-            raise RuntimeError(f"wall step {wall}: all workers dead")
-        split, slow = replan_on_straggle(monitor, alive, args.batch)
-        if slow and wall % args.log_every == 0:
-            print(f"[elastic] stragglers {list(slow)}; split "
-                  f"{[split[w] for w in alive]}", flush=True)
+            alive = membership.alive()
+            if not alive:
+                raise RuntimeError(f"wall step {wall}: all workers dead")
+            split, slow = replan_on_straggle(monitor, alive, args.batch)
+            if slow and wall % args.log_every == 0:
+                print(f"[elastic] stragglers {list(slow)}; split "
+                      f"{[split[w] for w in alive]}", flush=True)
 
-        parts = [rows_from(w, split[w]) for w in alive if split[w] > 0]
-        batch = {k: np.concatenate([p[k] for p in parts], axis=0)
-                 for k in parts[0]}
-        dev_batch = {k: jax.device_put(v, bshard[k])
-                     for k, v in batch.items()}
-        if cfg.arch_type in ("vlm", "audio"):
-            ee = batch_abs["extra_embeds"]
-            dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
-        params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
-        losses[train_step] = float(metrics["loss"])
-        if train_step % args.log_every == 0:
-            print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
-                  f"workers {len(alive)}", flush=True)
-        train_step += 1
-        wall += 1
-        if train_step % ckpt_every == 0:
-            policy.checkpoint(train_step, params, opt_state,
-                              {"arch": args.arch})
+            parts = [rows_from(w, split[w]) for w in alive if split[w] > 0]
+            batch = {k: np.concatenate([p[k] for p in parts], axis=0)
+                     for k in parts[0]}
+            dev_batch = {k: jax.device_put(v, bshard[k])
+                         for k, v in batch.items()}
+            if cfg.arch_type in ("vlm", "audio"):
+                ee = batch_abs["extra_embeds"]
+                dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
+            params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
+            losses[train_step] = float(metrics["loss"])
+            if train_step % args.log_every == 0:
+                print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
+                      f"workers {len(alive)}", flush=True)
+            train_step += 1
+            wall += 1
+            if train_step % ckpt_every == 0:
+                policy.checkpoint(train_step, params, opt_state,
+                                  {"arch": args.arch})
 
-    policy.checkpoint(train_step, params, opt_state, {"arch": args.arch})
+        policy.checkpoint(train_step, params, opt_state,
+                          {"arch": args.arch})
+        policy.wait()  # barrier: the final save is durable before we return
+    finally:
+        policy.close()  # never leak the writer past an exception unwind
     return {"losses": [losses[s] for s in sorted(losses)],
             "recoveries": recoveries, "params": params,
             "opt_state": opt_state, "final_alive": membership.alive()}

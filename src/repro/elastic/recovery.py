@@ -55,7 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (AsyncCheckpointer, AsyncCheckpointError,
+                              restore_checkpoint, save_checkpoint)
 from repro.elastic.reshard import reshard_stacked
 
 # NOTE: repro.serving types are imported lazily inside ServingDrainReadmit:
@@ -66,29 +67,72 @@ Pytree = Any
 
 @dataclasses.dataclass
 class SyncCheckpointRestore:
-    """Checkpoint/restore recovery for the synchronous all-reduce mode."""
+    """Checkpoint/restore recovery for the synchronous all-reduce mode.
+
+    async_save=True puts saves on an `AsyncCheckpointer` writer thread:
+    `checkpoint` then costs the caller only the device->host snapshot.
+    `recover` first waits out any in-flight save — so the rewind target
+    is deterministic: always the last *committed* step, never a
+    half-written one — and if the in-flight save turns out to have failed
+    (its error is recorded in `writer_errors`), recovery falls back to
+    the previous committed checkpoint: the failed step is simply redone
+    post-rewind."""
     ckpt_dir: str
     keep_last: int = 3
+    async_save: bool = False
     saved_step: int = -1
+
+    def __post_init__(self):
+        self._ckpt = (AsyncCheckpointer(self.ckpt_dir,
+                                        keep_last=self.keep_last)
+                      if self.async_save else None)
+        self.writer_errors: list = []
 
     def checkpoint(self, step: int, params: Pytree, opt_state: Pytree,
                    metadata: Optional[Dict] = None) -> str:
         meta = dict(metadata or {})
         meta["step"] = step
-        path = save_checkpoint(self.ckpt_dir, step,
-                               {"params": params, "opt": opt_state},
-                               meta, keep_last=self.keep_last)
+        tree = {"params": params, "opt": opt_state}
+        if self._ckpt is not None:
+            path = self._ckpt.save(step, tree, meta)
+        else:
+            path = save_checkpoint(self.ckpt_dir, step, tree, meta,
+                                   keep_last=self.keep_last)
         self.saved_step = step
         return path
 
     def recover(self, params: Pytree, opt_state: Pytree
                 ) -> Tuple[Pytree, Pytree, int]:
-        """Restore the latest checkpoint; the live (possibly torn) state is
-        passed only as an abstract template.  Returns (params, opt, step)."""
+        """Restore the latest committed checkpoint; the live (possibly
+        torn) state is passed only as an abstract template.  Returns
+        (params, opt, step)."""
+        step = None
+        if self._ckpt is not None:
+            try:
+                self._ckpt.wait()      # never restore an in-flight save
+            except AsyncCheckpointError as e:
+                self.writer_errors.append(e)
+            step = self._ckpt.last_committed_step()
         abs_tree = jax.eval_shape(
             lambda: {"params": params, "opt": opt_state})
-        tree, meta = restore_checkpoint(self.ckpt_dir, abs_tree)
+        tree, meta = restore_checkpoint(self.ckpt_dir, abs_tree, step=step)
         return tree["params"], tree["opt"], int(meta["step"])
+
+    def wait(self) -> None:
+        """Barrier: all handed-over saves durable (no-op when blocking).
+        Raises `AsyncCheckpointError` if a background save failed."""
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+    def close(self) -> None:
+        """Shut the writer down; unlike `wait`, never raises — late
+        writer failures land in `writer_errors` (close sits on error
+        paths where a deferred I/O error must not mask the real one)."""
+        if self._ckpt is not None:
+            try:
+                self._ckpt.close()
+            except AsyncCheckpointError as e:
+                self.writer_errors.append(e)
 
 
 @dataclasses.dataclass

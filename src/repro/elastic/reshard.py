@@ -116,14 +116,22 @@ def plan_split(global_batch: int, rates: Dict[int, float],
 def save_stacked(ckpt_dir: str, step: int, tree_w: Pytree,
                  worker_ids: Sequence[int], *, replicated: Pytree = None,
                  metadata: Optional[Dict] = None,
-                 keep_last: int = 0) -> str:
+                 keep_last: int = 0, checkpointer=None) -> str:
     """Checkpoint worker-stacked state + optional replicated state (e.g.
-    the EASGD center), recording the id->row mapping for elastic restore."""
+    the EASGD center), recording the id->row mapping for elastic restore.
+
+    `checkpointer` (an `AsyncCheckpointer` on `ckpt_dir`) moves the write
+    off-thread: the call returns after the host snapshot and the save
+    commits in the background (the checkpointer's own `keep_last` governs
+    retention).  Either way the on-disk layout is identical, so
+    `restore_stacked` needs no changes."""
     meta = dict(metadata or {})
     meta["worker_ids"] = [int(w) for w in worker_ids]
     tree = {"stacked": tree_w}
     if replicated is not None:
         tree["replicated"] = replicated
+    if checkpointer is not None:
+        return checkpointer.save(step, tree, meta)
     return save_checkpoint(ckpt_dir, step, tree, meta, keep_last=keep_last)
 
 

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint, latest_step
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
 from repro.configs import get_config
 from repro.core import sharding as SH
 from repro.data import make_pipeline
@@ -72,10 +73,21 @@ def train(argv=None) -> dict:
                     help="logical data-parallel workers for --elastic")
     ap.add_argument("--keep-last", type=int, default=3,
                     help="checkpoint retention for --elastic")
+    ap.add_argument("--async-ckpt", dest="async_ckpt", action="store_true",
+                    default=None,
+                    help="non-blocking checkpoint saves on a background "
+                         "writer (repro.checkpoint.AsyncCheckpointer); "
+                         "default: on for --elastic, off otherwise")
+    ap.add_argument("--no-async-ckpt", dest="async_ckpt",
+                    action="store_false")
     args = ap.parse_args(argv)
     if args.elastic and not args.ckpt_dir:
         ap.error("--elastic requires --ckpt-dir (sync recovery restores "
                  "from the last checkpoint)")
+    if args.async_ckpt is None:
+        # elastic checkpoints every ~10-20 steps: a blocking save there
+        # steals a full step from every worker, so async is the default
+        args.async_ckpt = args.elastic
 
     cfg = get_config(args.arch, smoke=args.smoke)
     # keep params fp32 on CPU for small-scale training stability
@@ -133,37 +145,50 @@ def train(argv=None) -> dict:
                     "recoveries": out["recoveries"],
                     "final_alive": out["final_alive"]}
 
+        saver = (AsyncCheckpointer(args.ckpt_dir)
+                 if args.async_ckpt and args.ckpt_dir else None)
+
+        def _save(at_step):
+            tree = {"params": params, "opt": opt_state}
+            meta = {"step": at_step, "arch": args.arch}
+            if saver is not None:
+                saver.save(at_step, tree, meta)
+            else:
+                save_checkpoint(args.ckpt_dir, at_step, tree, meta)
+
         losses = []
         t0 = time.time()
-        for i, batch in enumerate(pipe.batches(args.steps)):
-            step = step0 + i
-            dev_batch = {k: jax.device_put(v, bshard[k])
-                         for k, v in batch.items()}
-            if cfg.arch_type in ("vlm", "audio"):
-                ee = batch_abs["extra_embeds"]
-                dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
-            extra = ((jax.random.PRNGKey(args.seed + 1 + step),)
-                     if args.compress_grads else ())
-            params, opt_state, metrics = step_fn(params, opt_state,
-                                                 dev_batch, *extra)
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            if step % args.log_every == 0:
-                dt = time.time() - t0
-                print(f"step {step:5d} loss {loss:.4f} "
-                      f"(floor~{entropy_floor:.3f}) "
-                      f"gnorm {float(metrics['gnorm']):.3f} "
-                      f"{dt / max(i, 1):.2f}s/step", flush=True)
-            if (args.ckpt_dir and args.ckpt_every
-                    and (step + 1) % args.ckpt_every == 0):
-                save_checkpoint(args.ckpt_dir, step + 1,
-                                {"params": params, "opt": opt_state},
-                                {"step": step + 1, "arch": args.arch})
+        try:
+            for i, batch in enumerate(pipe.batches(args.steps)):
+                step = step0 + i
+                dev_batch = {k: jax.device_put(v, bshard[k])
+                             for k, v in batch.items()}
+                if cfg.arch_type in ("vlm", "audio"):
+                    ee = batch_abs["extra_embeds"]
+                    dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
+                extra = ((jax.random.PRNGKey(args.seed + 1 + step),)
+                         if args.compress_grads else ())
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     dev_batch, *extra)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if step % args.log_every == 0:
+                    dt = time.time() - t0
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"(floor~{entropy_floor:.3f}) "
+                          f"gnorm {float(metrics['gnorm']):.3f} "
+                          f"{dt / max(i, 1):.2f}s/step", flush=True)
+                if (args.ckpt_dir and args.ckpt_every
+                        and (step + 1) % args.ckpt_every == 0):
+                    _save(step + 1)
 
-        if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, step0 + args.steps,
-                            {"params": params, "opt": opt_state},
-                            {"step": step0 + args.steps, "arch": args.arch})
+            if args.ckpt_dir:
+                _save(step0 + args.steps)
+            if saver is not None:
+                saver.wait()  # barrier: the final save is durable on return
+        finally:
+            if saver is not None:
+                saver.close(wait=False)  # never leak the writer thread
 
     return {"losses": losses, "entropy_floor": entropy_floor,
             "params": params}

@@ -1,0 +1,356 @@
+"""Async checkpointing (repro.checkpoint.async_ckpt).
+
+Covers: byte-for-byte compatibility with the blocking saver, the
+non-blocking save / wait barrier / last-committed-step contract, deferred
+writer-error surfacing, crash consistency at EVERY writer failure point
+(restore always yields the newest committed checkpoint; the next save
+sweeps the debris), the recovery-policy integration (wait out or discard
+an in-flight save), and a property test: random pytrees x random W->W'
+reshard sequences round-trip bit-exactly through `save_stacked` /
+`restore_stacked` under both the blocking and async checkpointers.
+"""
+import pathlib
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+from repro.checkpoint import (AsyncCheckpointer, AsyncCheckpointError,
+                              FAILPOINTS, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.elastic import SyncCheckpointRestore, restore_stacked, save_stacked
+
+
+def _tree(v):
+    return {"w": jnp.full((3, 2), float(v), jnp.float32),
+            "b": jnp.full((4,), float(v), jnp.bfloat16),
+            "nested": {"step": jnp.asarray(int(v), jnp.int32)}}
+
+
+def _steps(d):
+    return sorted(int(p.name.split("_")[1])
+                  for p in pathlib.Path(d).glob("step_*"))
+
+
+def _restore_w(d, step=None):
+    tree, meta = restore_checkpoint(d, jax.eval_shape(lambda: _tree(0)),
+                                    step=step)
+    return float(np.asarray(tree["w"])[0, 0]), meta
+
+
+# ---------------------------------------------------------------------------
+# bit-compatibility with the blocking saver
+# ---------------------------------------------------------------------------
+def test_async_checkpoint_is_byte_identical_to_blocking(tmp_path):
+    """Same tree through both savers -> identical files (leaves AND
+    manifest), so every existing restore path works unchanged."""
+    a, b = str(tmp_path / "sync"), str(tmp_path / "async")
+    save_checkpoint(a, 7, _tree(3), {"arch": "x"})
+    with AsyncCheckpointer(b) as ck:
+        ck.save(7, _tree(3), {"arch": "x"})
+        ck.wait()
+        assert ck.last_committed_step() == 7
+    fa = sorted((tmp_path / "sync" / "step_00000007").iterdir())
+    fb = sorted((tmp_path / "async" / "step_00000007").iterdir())
+    assert [f.name for f in fa] == [f.name for f in fb]
+    for x, y in zip(fa, fb):
+        assert x.read_bytes() == y.read_bytes(), x.name
+    # and the async dir restores through the ordinary path (bf16 recast)
+    tree, _ = restore_checkpoint(b, jax.eval_shape(lambda: _tree(0)))
+    assert tree["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(_tree(3)["w"]))
+
+
+# ---------------------------------------------------------------------------
+# the non-blocking / barrier contract
+# ---------------------------------------------------------------------------
+def test_save_returns_before_commit_and_wait_barriers(tmp_path):
+    gate = threading.Event()
+    ck = AsyncCheckpointer(str(tmp_path), failpoint=lambda name: (
+        gate.wait(10) if name == "before_write" else None))
+    ck.save(5, _tree(5))
+    assert ck.last_committed_step() is None      # save returned, not durable
+    assert latest_step(str(tmp_path)) is None
+    gate.set()
+    ck.wait()                                    # the barrier
+    assert ck.last_committed_step() == 5
+    assert latest_step(str(tmp_path)) == 5
+    ck.close()
+
+
+def test_double_buffered_at_most_one_save_in_flight(tmp_path):
+    gate = threading.Event()
+    ck = AsyncCheckpointer(str(tmp_path), failpoint=lambda name: (
+        gate.wait(10) if name == "before_write" else None))
+    ck.save(1, _tree(1))                         # writer parked at the gate
+    second_done = threading.Event()
+
+    def second():
+        ck.save(2, _tree(2))
+        second_done.set()
+
+    t = threading.Thread(target=second, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not second_done.is_set()              # save #2 blocked on #1
+    gate.set()
+    t.join(10)
+    assert second_done.is_set()
+    ck.wait()
+    assert ck.last_committed_step() == 2
+    assert _steps(tmp_path) == [1, 2]
+    ck.close()
+
+
+def test_writer_error_surfaces_once_then_saves_recover(tmp_path):
+    calls = []
+
+    def flaky(name):
+        if name == "before_fsync" and not calls:
+            calls.append(name)
+            raise OSError("disk full (injected)")
+
+    ck = AsyncCheckpointer(str(tmp_path), failpoint=flaky)
+    ck.save(1, _tree(1))
+    with pytest.raises(AsyncCheckpointError, match="disk full"):
+        ck.wait()
+    assert ck.last_committed_step() is None      # failed step NOT committed
+    ck.save(2, _tree(2))                         # error consumed: usable
+    ck.wait()
+    assert ck.last_committed_step() == 2
+    assert _steps(tmp_path) == [2]               # failed tmp swept by save 2
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# crash consistency: a kill at EVERY failure point restores the newest
+# committed checkpoint, and the next save sweeps the debris
+# ---------------------------------------------------------------------------
+# what the newest committed step must be after save(4) dies at each point,
+# given committed history [2, 3] (keep_last=2).  "mid_replace" only fires
+# when overwriting an existing step and has its own test below.
+_EXPECT_AFTER_KILL = {
+    "before_write": 3,               # only an empty tmp dir exists
+    "before_fsync": 3,               # leaves staged, nothing visible
+    "after_fsync_before_rename": 3,  # durable but still invisible
+    "after_commit_before_gc": 4,     # renamed: committed, GC never ran
+    "mid_gc": 4,                     # committed, GC died between removals
+}
+
+
+def test_every_failpoint_is_covered():
+    """Adding a failpoint to the writer without a crash test here is a
+    hole in the harness — fail loudly instead."""
+    assert set(_EXPECT_AFTER_KILL) | {"mid_replace"} == set(FAILPOINTS)
+
+
+@pytest.mark.parametrize("point",
+                         [p for p in FAILPOINTS if p in _EXPECT_AFTER_KILL])
+def test_kill_at_failpoint_restores_newest_committed(tmp_path, point):
+    d = str(tmp_path)
+    with AsyncCheckpointer(d, keep_last=2) as ck:
+        for s in (1, 2, 3):
+            ck.save(s, _tree(s))
+        ck.wait()
+    assert _steps(tmp_path) == [2, 3]
+
+    def die(name):
+        if name == point:
+            raise RuntimeError(f"injected kill at {name}")
+
+    ck = AsyncCheckpointer(d, keep_last=2, failpoint=die)
+    ck.save(4, _tree(4))
+    with pytest.raises(AsyncCheckpointError, match=point):
+        ck.wait()
+    ck.close(wait=False)
+
+    expect = _EXPECT_AFTER_KILL[point]
+    # the "restarted process": restore sees exactly the newest committed
+    # checkpoint, with its own values -- never a torn step 4
+    assert latest_step(d) == expect
+    val, _ = _restore_w(d)
+    assert val == float(expect)
+    ck2 = AsyncCheckpointer(d, keep_last=2)
+    assert ck2.last_committed_step() == expect   # resumes from disk truth
+    if expect == 3:                              # the kill left a tmp orphan
+        assert list(tmp_path.glob(".tmp_step_*"))
+
+    # the next save sweeps orphans and re-converges retention
+    ck2.save(5, _tree(5))
+    ck2.wait()
+    ck2.close()
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    assert _steps(tmp_path) == [expect, 5]
+    val, _ = _restore_w(d)
+    assert val == 5.0
+
+
+def test_kill_mid_replace_rescues_displaced_checkpoint(tmp_path):
+    """Overwriting an existing step (elastic rewind re-save) must never
+    pass through a window where the step is simply GONE: the old dir is
+    displaced by rename, and a kill between the two renames is repaired
+    by the next save's sweep — the old copy comes back as the newest
+    committed state, because the new version never committed."""
+    d = str(tmp_path)
+    with AsyncCheckpointer(d) as ck:
+        ck.save(3, _tree(3))
+        ck.save(4, _tree(4))         # the step about to be re-saved
+        ck.wait()
+
+    def die(name):
+        if name == "mid_replace":
+            raise RuntimeError("injected kill at mid_replace")
+
+    ck = AsyncCheckpointer(d, failpoint=die)
+    ck.save(4, _tree(44))            # post-rewind redo of step 4
+    with pytest.raises(AsyncCheckpointError, match="mid_replace"):
+        ck.wait()
+    ck.close(wait=False)
+
+    # killed between the renames: step 4 is displaced, not destroyed
+    assert (tmp_path / ".old_step_00000004").exists()
+    assert _steps(tmp_path) == [3]
+
+    # the "restart": the next save's sweep rescues the displaced copy —
+    # restore yields the ORIGINAL step 4 (v44 never committed) — and the
+    # redo then overwrites it cleanly
+    with AsyncCheckpointer(d) as ck2:
+        ck2.save(5, _tree(5))
+        ck2.wait()
+        assert _steps(tmp_path) == [3, 4, 5]
+        val, _ = _restore_w(d, step=4)
+        assert val == 4.0            # the rescued pre-kill copy
+        ck2.save(4, _tree(44))       # redo of the failed overwrite
+        ck2.wait()
+    val, _ = _restore_w(d, step=4)
+    assert val == 44.0
+    assert not list(tmp_path.glob(".old_step_*"))
+    assert not list(tmp_path.glob(".tmp_step_*"))
+
+
+# ---------------------------------------------------------------------------
+# recovery-policy integration: wait out / discard the in-flight save
+# ---------------------------------------------------------------------------
+def test_recover_waits_out_inflight_save(tmp_path):
+    """Worker dies while a save is in flight: recovery must block on the
+    writer and rewind to that save once committed — never restore a
+    half-written step, never race the rename."""
+    policy = SyncCheckpointRestore(str(tmp_path), async_save=True)
+    policy.checkpoint(10, _tree(10), {"m": jnp.zeros(2)})
+    policy.wait()
+    # slow writer: the step-20 save is guaranteed in flight at recover()
+    policy._ckpt._failpoint = lambda name: (
+        time.sleep(0.2) if name == "before_fsync" else None)
+    policy.checkpoint(20, _tree(20), {"m": jnp.zeros(2)})
+    p, o, restored = policy.recover(_tree(0), {"m": jnp.zeros(2)})
+    assert restored == 20                        # waited for the commit
+    assert float(np.asarray(p["w"])[0, 0]) == 20.0
+    assert not policy.writer_errors
+    policy.close()
+
+
+def test_recover_discards_failed_inflight_save(tmp_path):
+    """If the in-flight save dies, recovery falls back to the previous
+    committed checkpoint (the failed step is redone after the rewind)
+    and records — not raises — the writer error."""
+    policy = SyncCheckpointRestore(str(tmp_path), async_save=True)
+    policy.checkpoint(10, _tree(10), {"m": jnp.zeros(2)})
+    policy.wait()
+
+    def die(name):
+        if name == "after_fsync_before_rename":
+            raise RuntimeError("injected kill")
+
+    policy._ckpt._failpoint = die
+    policy.checkpoint(20, _tree(20), {"m": jnp.zeros(2)})
+    p, o, restored = policy.recover(_tree(0), {"m": jnp.zeros(2)})
+    assert restored == 10                        # in-flight save discarded
+    assert float(np.asarray(p["w"])[0, 0]) == 10.0
+    assert len(policy.writer_errors) == 1
+    policy._ckpt._failpoint = None               # the "redo" save commits
+    policy.checkpoint(20, _tree(21), {"m": jnp.zeros(2)})
+    policy.wait()
+    assert policy._ckpt.last_committed_step() == 20
+    policy.close()
+
+
+# ---------------------------------------------------------------------------
+# property: random pytrees x random reshard sequences round-trip through
+# save_stacked/restore_stacked bit-exactly for survivors, sync and async
+# ---------------------------------------------------------------------------
+def _random_stacked(rng, W):
+    def leaf(dt):
+        shape = (W,) + tuple(int(x) for x in
+                             rng.integers(1, 5, size=rng.integers(1, 3)))
+        if np.issubdtype(dt, np.integer):
+            return jnp.asarray(rng.integers(-99, 99, size=shape), dt)
+        return jnp.asarray(rng.standard_normal(shape), dt)
+
+    return {"p": leaf(np.float32),
+            "nested": {"m": leaf(np.int32), "v": leaf(np.float16)},
+            "low": jnp.asarray(rng.standard_normal((W, 3)), jnp.bfloat16)}
+
+
+def _rows(tree_w, i):
+    return jax.tree_util.tree_map(lambda l: l[i], tree_w)
+
+
+def _assert_rows_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def _roundtrip_random_reshards(seed: int, use_async: bool) -> None:
+    rng = np.random.default_rng(seed)
+    W = int(rng.integers(2, 6))
+    ids = list(range(W))
+    tree_w = _random_stacked(rng, W)
+    expected = {wid: _rows(tree_w, i) for i, wid in enumerate(ids)}
+    next_id = W
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d) if use_async else None
+        try:
+            for step in range(1, int(rng.integers(2, 5))):
+                save_stacked(d, step, tree_w, ids, checkpointer=ck)
+                if ck is not None:
+                    ck.wait()                    # restore needs the commit
+                # random next membership: >=1 survivor + random joiners
+                n_keep = int(rng.integers(1, len(ids) + 1))
+                keep = sorted(rng.choice(ids, size=n_keep, replace=False))
+                n_join = int(rng.integers(0, 3))
+                joiners = list(range(next_id, next_id + n_join))
+                next_id += n_join
+                new_ids = [int(w) for w in keep] + joiners
+                row_abs = jax.eval_shape(lambda: _rows(tree_w, 0))
+                tree_w, _, meta = restore_stacked(d, row_abs, new_ids,
+                                                  step=step)
+                assert meta["worker_ids"] == ids
+                for pos, wid in enumerate(new_ids):
+                    if wid in expected:          # survivor: bit-exact
+                        _assert_rows_equal(_rows(tree_w, pos), expected[wid])
+                # joiners become first-class members for the next round
+                expected = {wid: _rows(tree_w, pos)
+                            for pos, wid in enumerate(new_ids)}
+                ids = new_ids
+        finally:
+            if ck is not None:
+                ck.close()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_stacked_roundtrip_survivor_rows_bit_exact(seed):
+    """Random pytrees x random W->W' reshard sequences: rows of ids
+    present across a save/restore keep their bytes, under both savers —
+    and both savers' checkpoints are interchangeable on disk."""
+    _roundtrip_random_reshards(seed, use_async=False)
+    _roundtrip_random_reshards(seed, use_async=True)

@@ -1,6 +1,12 @@
 """Checkpoint retention: `keep_last` GC ordering and the orphaned
 `.tmp_step_*` sweep, including the case where an elastic restore runs
-while a killed save's tmp dir is still on disk."""
+while a killed save's tmp dir is still on disk.
+
+Every test that saves goes through the `do_save` fixture, so the whole
+retention/sweep spec is pinned for BOTH the blocking `save_checkpoint`
+and the `AsyncCheckpointer` (which must be bit-compatible — see
+tests/test_async_ckpt.py for the async-only crash-consistency harness).
+"""
 import json
 import pathlib
 
@@ -9,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import (AsyncCheckpointer, restore_checkpoint,
+                              save_checkpoint)
 from repro.checkpoint.ckpt import gc_checkpoints, latest_step, sweep_tmp
 
 
@@ -22,13 +29,28 @@ def _steps(d):
                   for p in pathlib.Path(d).glob("step_*"))
 
 
+@pytest.fixture(params=["blocking", "async"])
+def do_save(request):
+    """`save_checkpoint`-shaped saver, blocking or async-with-barrier."""
+    if request.param == "blocking":
+        return save_checkpoint
+
+    def _async_save(d, step, tree, metadata=None, keep_last=0):
+        with AsyncCheckpointer(d, keep_last=keep_last) as ck:
+            path = ck.save(step, tree, metadata)
+            ck.wait()
+        return path
+
+    return _async_save
+
+
 # ---------------------------------------------------------------------------
 # keep_last GC
 # ---------------------------------------------------------------------------
-def test_keep_last_retains_newest_by_step_number(tmp_path):
+def test_keep_last_retains_newest_by_step_number(tmp_path, do_save):
     d = str(tmp_path)
     for s in (1, 2, 3, 4, 5):
-        save_checkpoint(d, s, _tree(s), keep_last=3)
+        do_save(d, s, _tree(s), keep_last=3)
     assert _steps(d) == [3, 4, 5]
     # the survivors restore to their own values (GC removed the right dirs)
     tree, _ = restore_checkpoint(d, jax.eval_shape(lambda: _tree(0)), step=3)
@@ -36,38 +58,38 @@ def test_keep_last_retains_newest_by_step_number(tmp_path):
                                   np.full((3,), 3.0, np.float32))
 
 
-def test_keep_last_orders_numerically_not_lexically(tmp_path):
+def test_keep_last_orders_numerically_not_lexically(tmp_path, do_save):
     """step_00000002 < step_00000010 both lexically and numerically thanks
     to zero-padding, but gc sorts parsed ints — pin that contract with
     out-of-order saves and a wide step range."""
     d = str(tmp_path)
     for s in (10, 2, 30, 7):
-        save_checkpoint(d, s, _tree(s))
+        do_save(d, s, _tree(s))
     removed = gc_checkpoints(d, keep_last=2)
     assert _steps(d) == [10, 30]
     assert sorted(removed) == [str(tmp_path / "step_00000002"),
                                str(tmp_path / "step_00000007")]
 
 
-def test_keep_last_resave_same_step_not_double_counted(tmp_path):
+def test_keep_last_resave_same_step_not_double_counted(tmp_path, do_save):
     """An elastic rewind re-saves an existing step (restore + redo):
     overwriting step N must not evict older checkpoints spuriously."""
     d = str(tmp_path)
     for s in (1, 2, 3):
-        save_checkpoint(d, s, _tree(s), keep_last=3)
-    save_checkpoint(d, 3, _tree(33), keep_last=3)  # post-rewind re-save
+        do_save(d, s, _tree(s), keep_last=3)
+    do_save(d, 3, _tree(33), keep_last=3)  # post-rewind re-save
     assert _steps(d) == [1, 2, 3]
     tree, _ = restore_checkpoint(d, jax.eval_shape(lambda: _tree(0)), step=3)
     np.testing.assert_array_equal(np.asarray(tree["w"]),
                                   np.full((3,), 33.0, np.float32))
 
 
-def test_gc_ignores_incomplete_checkpoints(tmp_path):
+def test_gc_ignores_incomplete_checkpoints(tmp_path, do_save):
     """A dir without manifest.json (killed mid-rename window, foreign
     debris) neither counts toward keep_last nor gets deleted."""
     d = str(tmp_path)
     for s in (1, 2):
-        save_checkpoint(d, s, _tree(s))
+        do_save(d, s, _tree(s))
     broken = tmp_path / "step_00000099"
     broken.mkdir()
     removed = gc_checkpoints(d, keep_last=2)
@@ -87,22 +109,22 @@ def _fake_orphan(tmp_path, step):
     return orphan
 
 
-def test_save_sweeps_orphans_from_killed_runs(tmp_path):
+def test_save_sweeps_orphans_from_killed_runs(tmp_path, do_save):
     d = str(tmp_path)
     o1 = _fake_orphan(tmp_path, 7)
     o2 = _fake_orphan(tmp_path, 9)   # any step, not just the one re-saved
-    save_checkpoint(d, 7, _tree(7))
+    do_save(d, 7, _tree(7))
     assert not o1.exists() and not o2.exists()
     assert _steps(d) == [7]
 
 
-def test_restore_races_orphaned_save(tmp_path):
+def test_restore_races_orphaned_save(tmp_path, do_save):
     """The elastic crash story: a save is killed mid-write (tmp dir left
     behind), the recovery policy restores the LAST COMPLETE checkpoint.
     The orphan must be invisible to restore/latest_step, and the next
     post-restore save must clear it."""
     d = str(tmp_path)
-    save_checkpoint(d, 10, _tree(10))
+    do_save(d, 10, _tree(10))
     orphan = _fake_orphan(tmp_path, 20)  # killed save of step 20
 
     assert latest_step(d) == 10          # orphan not restorable
@@ -112,7 +134,7 @@ def test_restore_races_orphaned_save(tmp_path):
     assert orphan.exists()               # restore is read-only
 
     # rewound trainer overwrites the lost step; orphan swept atomically
-    save_checkpoint(d, 11, _tree(11), keep_last=2)
+    do_save(d, 11, _tree(11), keep_last=2)
     assert not orphan.exists()
     assert _steps(d) == [10, 11]
 
@@ -125,14 +147,15 @@ def test_sweep_tmp_reports_what_it_removed(tmp_path):
     assert swept == [str(o)] and not o.exists()
 
 
-def test_retention_through_elastic_recovery_cycle(tmp_path):
+@pytest.mark.parametrize("async_save", [False, True])
+def test_retention_through_elastic_recovery_cycle(tmp_path, async_save):
     """End-to-end with the sync recovery policy: checkpoint cadence +
     keep_last + a simulated kill leave exactly keep_last complete
-    checkpoints and no tmp debris."""
+    checkpoints and no tmp debris — blocking or async writer alike."""
     from repro.elastic import SyncCheckpointRestore
 
     d = str(tmp_path)
-    policy = SyncCheckpointRestore(d, keep_last=2)
+    policy = SyncCheckpointRestore(d, keep_last=2, async_save=async_save)
     params, opt = _tree(0), _tree(100)
     for s in (10, 20, 30):
         policy.checkpoint(s, _tree(s), opt)
@@ -142,5 +165,7 @@ def test_retention_through_elastic_recovery_cycle(tmp_path):
     np.testing.assert_array_equal(np.asarray(p["w"]),
                                   np.full((3,), 30.0, np.float32))
     policy.checkpoint(40, _tree(40), opt)
+    policy.wait()                        # async: step-40 save is committed
+    policy.close()
     assert _steps(d) == [30, 40]
     assert list(tmp_path.glob(".tmp_step_*")) == []

@@ -8,6 +8,7 @@ launcher path.
 """
 import json
 import pathlib
+import time
 
 import jax
 import jax.numpy as jnp
@@ -288,6 +289,61 @@ def test_sim_driver_replans_on_trace_slowdown(tmp_path):
                       ckpt_dir=str(tmp_path))
     assert res.splits_replanned > 0
     assert res.final_loss < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# async checkpointing through the elastic driver
+# ---------------------------------------------------------------------------
+def test_async_ckpt_trajectory_bit_identical_to_blocking(tmp_path):
+    """Moving saves off-thread must not change WHAT is trained: same
+    trace -> same losses, same rewind targets, same simulated time, same
+    checkpoints on disk."""
+    problem = ElasticProblem()
+    kw = dict(mode="sync", steps=50,
+              trace=FailureTrace.single_failure(23, 1))
+    block = run_elastic(problem, ckpt_dir=str(tmp_path / "b"), **kw)
+    async_ = run_elastic(problem, ckpt_dir=str(tmp_path / "a"),
+                         async_ckpt=True, **kw)
+    assert async_.losses == block.losses
+    assert async_.sim_time == block.sim_time
+    assert ([(r.wall_step, r.lost_steps, r.cause)
+             for r in async_.recoveries] ==
+            [(r.wall_step, r.lost_steps, r.cause)
+             for r in block.recoveries])
+    assert (sorted(p.name for p in (tmp_path / "a").glob("step_*")) ==
+            sorted(p.name for p in (tmp_path / "b").glob("step_*")))
+
+
+def test_worker_death_with_async_save_in_flight_mid_rewind(tmp_path,
+                                                           monkeypatch):
+    """The restore race: a worker dies exactly when the cadence save is
+    still in the writer.  Recovery must wait the in-flight save out (not
+    restore an older step, not read a half-written one): the rewind
+    target is deterministic and identical to the blocking run's."""
+    import repro.elastic.recovery as rec
+
+    real = rec.AsyncCheckpointer
+
+    def slow_writer(*a, **kw):
+        # park every save in the writer long enough that the death at
+        # wall step 10 provably arrives while save(10) is in flight
+        kw["failpoint"] = lambda name: (time.sleep(0.1)
+                                        if name == "before_fsync" else None)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(rec, "AsyncCheckpointer", slow_writer)
+    problem = ElasticProblem()
+    kw = dict(mode="sync", steps=30, ckpt_every=10,
+              trace=FailureTrace.single_failure(10, 1))
+    res = run_elastic(problem, ckpt_dir=str(tmp_path / "a"),
+                      async_ckpt=True, **kw)
+    # death on wall 10 = the step right after save(10) was handed over:
+    # recovery waited for its commit and rewound to it, losing 0 steps
+    assert [(r.wall_step, r.lost_steps) for r in res.recoveries] == [(10, 0)]
+    monkeypatch.setattr(rec, "AsyncCheckpointer", real)
+    block = run_elastic(problem, ckpt_dir=str(tmp_path / "b"), **kw)
+    assert res.losses == block.losses
+    assert res.final_loss == block.final_loss
 
 
 # ---------------------------------------------------------------------------

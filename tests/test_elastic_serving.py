@@ -253,6 +253,45 @@ def test_fleet_slow_replica_gets_less_work(params):
     assert routed.get(0, 0) < routed[1] and routed.get(0, 0) < routed[2]
 
 
+def test_drained_continuations_skip_suspect_replica(params):
+    """ROADMAP "SUSPECT re-route" gap, regression-pinned: a replica in
+    its SUSPECT window receives no NEW admissions (long established) and
+    no REQUEUED drain continuations either.  Replica 2 hangs at wall 2
+    (SUSPECT until the timeout kills it at wall 4); replica 0 crashes at
+    wall 3, so its drained continuations are requeued exactly inside
+    that window — every one must land on the healthy replica 1, and the
+    stitched outputs must still match the failure-free run."""
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(2, "hang", 2),
+                          TraceEvent(3, "fail", 0)])
+    fleet = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                       trace=trace)
+    for q in _stream(10, cfg):
+        fleet.submit(q)
+    routed2_frozen = None
+    drain_hit_suspect_window = False
+    while not fleet.done:
+        fleet.step()
+        if fleet.membership.workers[2].status == "suspect":
+            if routed2_frozen is None:   # admissions frozen on suspicion
+                routed2_frozen = fleet.router.routed.get(2, 0)
+            if fleet.drains:             # replica 0's drain landed in-window
+                drain_hit_suspect_window = True
+        if routed2_frozen is not None:   # ... and stays frozen: suspect,
+            assert fleet.router.routed.get(2, 0) == routed2_frozen
+    assert drain_hit_suspect_window      # the scenario really occurred
+    st = fleet.stats()
+    assert st["drains"] == 2             # crash drain + timeout drain
+    assert st["readmitted"] >= 1
+    assert st["finished"] == 10          # zero dropped
+    fins = sorted(fleet.finished, key=lambda f: f.rid)
+    for a, b in zip(free, fins):
+        assert a.rid == b.rid and a.tokens == b.tokens
+    # dead replicas then also never reappear in routing
+    assert set(fleet.replicas) == {1}
+
+
 def test_fleet_all_replicas_dead_raises(params):
     cfg = _cfg()
     trace = FailureTrace([TraceEvent(1, "fail", 0), TraceEvent(1, "fail", 1),

@@ -34,6 +34,32 @@ def test_train_launcher_resume(tmp_path):
     assert latest_step(str(tmp_path)) == 15  # 10 + 5 resumed
 
 
+def test_train_launcher_async_ckpt_matches_blocking(tmp_path):
+    """--async-ckpt must only move the write off-thread: same training,
+    byte-identical checkpoints, and --resume needs no changes."""
+    def run(d, *extra):
+        return train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "8",
+                      "--batch", "2", "--seq", "32", "--log-every", "100",
+                      "--ckpt-every", "4", "--ckpt-dir", d, *extra])
+
+    run(str(tmp_path / "b"), "--no-async-ckpt")
+    run(str(tmp_path / "a"), "--async-ckpt")
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path / "a")) == 8
+    assert latest_step(str(tmp_path / "b")) == 8
+    fa = sorted((tmp_path / "a").glob("step_*/*"))
+    fb = sorted((tmp_path / "b").glob("step_*/*"))
+    assert ([p.relative_to(tmp_path / "a") for p in fa] ==
+            [p.relative_to(tmp_path / "b") for p in fb])
+    for x, y in zip(fa, fb):
+        assert x.read_bytes() == y.read_bytes(), x.name
+    # resume reads the async-written checkpoint through the stock path
+    train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "4",
+           "--batch", "2", "--seq", "32", "--log-every", "100",
+           "--ckpt-dir", str(tmp_path / "a"), "--resume", "--async-ckpt"])
+    assert latest_step(str(tmp_path / "a")) == 12
+
+
 def test_train_launcher_compressed_grads():
     out = train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "25",
                  "--batch", "4", "--seq", "64", "--log-every", "100",
