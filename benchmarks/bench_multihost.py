@@ -1,0 +1,176 @@
+"""Multi-host control plane: ProcTransport vs SimTransport.
+
+Runs the identical elastic training workload (same trace, same steps)
+with the coordinator fed by the simulated clock and by real worker
+processes, then asserts the cross-transport contract end to end:
+
+  * equivalence — identical membership transition logs and bit-identical
+    loss trajectories (the control plane changes WHERE events come from,
+    never WHAT training computes);
+  * overhead — two bounds on the control-plane tax.  The narrow one:
+    the transport's poll cost stays under 5% of step time under
+    ProcTransport (heartbeat draining + process supervision off the
+    hot path); `overhead.headroom` (1 - poll_frac) is gated in CI at
+    0.97x the committed baseline — deliberately TIGHTER than the
+    bench's own 5% cliff, so the gate catches drift the assert would
+    still wave through.  The end-to-end one: proc/sim training
+    throughput on the same machine, best-of-2 with worker spawn outside
+    the timed window — this also reflects costs outside poll(), like
+    reader-thread GIL contention from chattier heartbeats, but on
+    small shared CI hosts the wall-clock ratio swings ~2x between
+    invocations (measured), so it carries only a catastrophic 0.25x
+    floor and is otherwise reported, not gated.
+
+  PYTHONPATH=src python benchmarks/bench_multihost.py [--quick] [--workers N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.cluster import ProcTransport, SimTransport
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+class TimedTransport:
+    """Delegating wrapper that accounts every poll() second."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.poll_seconds = 0.0
+        self.polls = 0
+
+    def start(self, num_workers):
+        return self.inner.start(num_workers)
+
+    def poll(self, step):
+        t0 = time.perf_counter()
+        out = self.inner.poll(step)
+        self.poll_seconds += time.perf_counter() - t0
+        self.polls += 1
+        return out
+
+    def commit_reports(self):
+        return self.inner.commit_reports()
+
+    def host_devices(self):
+        return self.inner.host_devices()
+
+    def captured_trace(self):
+        return self.inner.captured_trace()
+
+    def close(self):
+        return self.inner.close()
+
+
+def bench_transport(make_inner, problem, *, workers, steps, batch,
+                    repeats=2):
+    """Best-of-`repeats` timing: proc worker spawn is pre-started
+    outside the timed window (Transport.start is idempotent) and the
+    fastest run is kept, so the reported throughput measures the steady
+    control-plane tax rather than process-startup and scheduler noise.
+    The trace rides inside make_inner (SimTransport(trace) /
+    ProcTransport(inject=trace)); run_elastic rejects trace= alongside
+    transport=, so it is deliberately not forwarded here."""
+    best = None
+    res = None
+    for _ in range(repeats):
+        transport = TimedTransport(make_inner())
+        transport.start(workers)     # spawn cost outside the timer
+        t0 = time.perf_counter()
+        res = run_elastic(problem, mode="local_sgd", workers=workers,
+                          steps=steps, global_batch=batch,
+                          transport=transport)
+        wall = time.perf_counter() - t0
+        m = {
+            "steps_per_s": steps / wall,
+            "wall_s": wall,
+            "poll_s": transport.poll_seconds,
+            "poll_frac": transport.poll_seconds / wall,
+        }
+        if best is None or m["steps_per_s"] > best["steps_per_s"]:
+            best = m
+    return res, best
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer steps")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.steps = 80
+
+    problem = ElasticProblem()
+    # one real actuation of each flavor, exercising the injection path
+    trace = FailureTrace([
+        TraceEvent(args.steps // 4, "fail", 1),
+        TraceEvent(args.steps // 2, "slow", 0, 0.5),
+    ])
+
+    # warm the jit caches so compile time doesn't skew either side
+    run_elastic(problem, mode="local_sgd", workers=args.workers,
+                steps=3, global_batch=args.batch)
+
+    sim_res, sim_m = bench_transport(lambda: SimTransport(trace), problem,
+                                     workers=args.workers,
+                                     steps=args.steps, batch=args.batch)
+    proc_res, proc_m = bench_transport(lambda: ProcTransport(inject=trace),
+                                       problem, workers=args.workers,
+                                       steps=args.steps, batch=args.batch)
+
+    equivalent = (
+        [t.as_tuple() for t in sim_res.transitions] ==
+        [t.as_tuple() for t in proc_res.transitions]
+        and sim_res.losses == proc_res.losses
+        and sim_res.final_alive == proc_res.final_alive)
+
+    report = {
+        "workers": args.workers, "steps": args.steps,
+        "global_batch": args.batch,
+        "sim": sim_m, "proc": proc_m,
+        "overhead": {
+            "headroom": 1.0 - proc_m["poll_frac"],
+            "tput_ratio": proc_m["steps_per_s"] / sim_m["steps_per_s"],
+        },
+        "equivalent": equivalent,
+    }
+    print("transport,steps_per_s,poll_frac")
+    for name, m in (("sim", sim_m), ("proc", proc_m)):
+        print(f"{name},{m['steps_per_s']:.1f},{m['poll_frac']:.4f}")
+    print(f"equivalent={equivalent}  "
+          f"proc/sim tput={report['overhead']['tput_ratio']:.2f}x  "
+          f"headroom={report['overhead']['headroom']:.3f}")
+
+    # ---- acceptance ----------------------------------------------------
+    assert equivalent, (
+        "ProcTransport diverged from SimTransport under the same trace")
+    frac = proc_m["poll_frac"]
+    assert frac < 0.05, (
+        f"coordinator overhead {frac:.1%} of step time under ProcTransport "
+        f"(budget: <5%)")
+    # catastrophic floor only: the wall-clock ratio is too noisy on
+    # small shared hosts to gate tighter (see module docstring)
+    ratio = report["overhead"]["tput_ratio"]
+    assert ratio >= 0.25, (
+        f"end-to-end control-plane tax: proc runs at {ratio:.2f}x sim "
+        f"throughput (catastrophic floor: 0.25x) — heartbeat/reader "
+        f"contention outside poll() is taxing the train loop")
+
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "multihost.json"
+    out.write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

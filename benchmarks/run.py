@@ -15,6 +15,9 @@ Sections:
   elastic    : recovery latency + goodput under failure traces
   elastic_serving : multi-replica fleet drain/re-admit under failure traces
   checkpoint : blocking vs async checkpoint saves at the elastic cadence
+  multihost  : ProcTransport vs SimTransport — equivalence + control-
+               plane overhead (poll <5% of step time, end-to-end
+               throughput tax bounded) on real worker processes
   roofline   : §Roofline report from benchmarks/results/*.json
 """
 from __future__ import annotations
@@ -31,7 +34,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SECTIONS = ["techniques", "classic", "rl", "pipeline", "kernels",
             "moe_routing", "serving", "elastic", "elastic_serving",
-            "checkpoint", "roofline"]
+            "checkpoint", "multihost", "roofline"]
 
 
 def _banner(name: str) -> None:
@@ -43,7 +46,7 @@ _MODULES = {
     "rl": "bench_rl", "kernels": "bench_kernels",
     "moe_routing": "bench_moe_routing", "serving": "bench_serving",
     "elastic": "bench_elastic", "elastic_serving": "bench_elastic_serving",
-    "checkpoint": "bench_checkpoint",
+    "checkpoint": "bench_checkpoint", "multihost": "bench_multihost",
     "roofline": "roofline",
 }
 _ARGV = {"roofline": ["--mesh", "both"]}

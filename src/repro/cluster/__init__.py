@@ -1,0 +1,64 @@
+"""Unified cluster control plane: one coordinator for training + serving.
+
+Architecture (the survey's coordination layer, made a subsystem):
+
+    FailureTrace ----\\                         /--> elastic.driver
+                      v                        |    (run_elastic,
+    Transport ABC -> Coordinator -- epochs ----+     elastic_lm_loop)
+    | SimTransport    | Membership (1 machine) |
+    | ProcTransport   | ThroughputMonitor      \\--> serving.fleet
+         |            | commit-step aggregation      (ServeFleet)
+         v            v
+     captured     rewind_step() = min over hosts'
+     FailureTrace AsyncCheckpointer.last_committed_step()
+
+* **Coordinator** (`coordinator.py`) — the single membership authority:
+  epoch/generation numbers, the one failure-detector state machine,
+  straggler telemetry -> DBS split planning, and multi-host checkpoint
+  consistency (recovery rewinds to the fleet-wide minimum committed
+  step).  Training and serving both subscribe to its transitions, so
+  fail / hang->timeout / join / slow semantics are defined exactly once.
+* **Transport ABC** (`transport.py`) — where membership events come
+  from.  `SimTransport` (`sim.py`) replays a `FailureTrace` on the
+  simulated clock, preserving bit-exact determinism of every test and
+  benchmark.  `ProcTransport` (`proc.py`) runs real worker processes
+  (subprocess children speaking line-JSON heartbeat RPC over pipes),
+  actuates injected traces against them, detects organic
+  crashes/silence, and captures everything it observed back into the
+  same `FailureTrace` JSON — so a live incident replays
+  deterministically under sim.
+
+The cross-transport contract (pinned by `tests/test_cluster.py` and
+gated by `benchmarks/bench_multihost.py`): the same trace driven through
+either transport yields the identical membership transition log, and the
+coordinator's control-plane overhead stays <5% of step time.
+
+Imports here are lazy (PEP 562): `ProcTransport` worker processes
+import `repro.cluster.proc`, which must not pull jax in via this
+package's namespace.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "Coordinator": "repro.cluster.coordinator",
+    "Transport": "repro.cluster.transport",
+    "SimTransport": "repro.cluster.sim",
+    "ProcTransport": "repro.cluster.proc",
+}
+
+__all__ = list(_EXPORTS)
+
+if TYPE_CHECKING:  # pragma: no cover - type checkers only
+    from repro.cluster.coordinator import Coordinator
+    from repro.cluster.proc import ProcTransport
+    from repro.cluster.sim import SimTransport
+    from repro.cluster.transport import Transport
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)

@@ -1,0 +1,201 @@
+"""Coordinator: the single membership/synchronization authority shared
+by elastic training and elastic serving.
+
+Before this subsystem existed, `elastic.driver` and `serving.fleet` each
+ran a private copy of the same loop — advance the membership machine,
+bucket the transitions, feed the straggler monitor, forget the dead.
+The coordinator defines that loop once:
+
+  * **Membership authority** — owns the one `elastic.Membership` state
+    machine; `advance(wall)` pulls events from the pluggable `Transport`
+    (simulated trace or real multi-process heartbeats) and applies them.
+    Consumers either use the returned transitions or `subscribe` per
+    kind ("death" / "join" / "rate" / "suspect") — the serving fleet's
+    drain/spawn reactions are subscriptions, so fail/hang/join/slow
+    semantics are identical across training and serving.
+  * **Epochs / generations** — `epoch` bumps once per membership-changing
+    advance (any death or join); `generation` is the finer-grained
+    membership counter (one bump per death + per join) used to fence
+    stale per-worker state.
+  * **Straggler telemetry** — the shared `ThroughputMonitor`: rate
+    transitions feed it, deaths forget it, and `plan_split` turns it
+    into a DBS batch split (`replan_on_straggle`) for any consumer.
+  * **Commit-step aggregation** — hosts report their
+    `AsyncCheckpointer.last_committed_step()` (directly via
+    `report_commit`, or piggybacked on transport heartbeats); the
+    fleet-wide safe recovery point is `rewind_step()` = the MINIMUM over
+    surviving hosts, because a checkpoint step only exists cluster-wide
+    once every host has committed it.  Dead hosts drop out of the
+    aggregate — their shards are being rebuilt from the survivors'
+    floor anyway.
+  * **Placement** — `place_rows` device_puts worker-stacked state rows
+    onto the transport's host -> device map after a reshard, so survivor
+    rows land on the shrunken mesh (`jax.distributed`-style dense host
+    ranks; a no-op under simulated transports).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.elastic.membership import (DEAD, FailureTrace, Membership,
+                                      Transition)
+from repro.elastic.straggler import ThroughputMonitor, replan_on_straggle
+
+from repro.cluster.sim import SimTransport
+from repro.cluster.transport import Transport
+
+Pytree = Any
+
+
+class Coordinator:
+    def __init__(self, transport: Optional[Transport] = None,
+                 num_workers: int = 1, *, heartbeat_timeout: int = 3,
+                 suspect_after: int = 1, monitor_decay: float = 0.5,
+                 keep_transition_log: bool = True):
+        """keep_transition_log=False drops the cumulative history (the
+        cross-transport equivalence artifact) — for indefinitely-lived
+        consumers like a serving fleet, where it would grow without
+        bound; subscriptions and all live views are unaffected."""
+        self.transport = transport or SimTransport(FailureTrace())
+        self.membership = Membership(num_workers, trace=None,
+                                     heartbeat_timeout=heartbeat_timeout,
+                                     suspect_after=suspect_after)
+        self.monitor = ThroughputMonitor(decay=monitor_decay)
+        self.epoch = 0
+        self.keep_transition_log = keep_transition_log
+        self.transitions: List[Transition] = []
+        self._subs: Dict[str, List[Callable[[Transition], None]]] = {}
+        self._commits: Dict[int, int] = {}
+        try:
+            self.transport.start(num_workers)
+        except BaseException:
+            # a partial start (some workers spawned, one failed to beat)
+            # must not leak the live ones: the caller never receives the
+            # coordinator, so nobody else can close them
+            self.transport.close()
+            raise
+
+    # -- views ---------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        return self.membership.generation
+
+    def alive(self) -> Tuple[int, ...]:
+        return self.membership.alive()
+
+    def rates(self) -> Dict[int, float]:
+        return self.membership.rates()
+
+    def transition_log(self) -> List[Tuple]:
+        """The full membership history in canonical serializable form —
+        the artifact the cross-transport equivalence suite compares
+        (empty when keep_transition_log=False)."""
+        return [t.as_tuple() for t in self.transitions]
+
+    # -- subscriptions -------------------------------------------------
+    def subscribe(self, kind: str,
+                  fn: Callable[[Transition], None]) -> None:
+        """Register fn(transition) for one transition kind ("death",
+        "join", "rate", "suspect").  Called during `advance`, in
+        transition order, after membership and telemetry are updated —
+        a subscriber always sees the post-transition cluster view."""
+        if kind not in ("death", "join", "rate", "suspect"):
+            raise ValueError(f"unknown transition kind {kind!r}")
+        self._subs.setdefault(kind, []).append(fn)
+
+    # -- the control loop ----------------------------------------------
+    def advance(self, wall: int) -> List[Transition]:
+        """One wall step: poll the transport, apply events, update
+        epoch/telemetry/commits, notify subscribers."""
+        events = self.transport.poll(wall)
+        transitions = self.membership.apply(wall, events)
+        changed = False
+        for t in transitions:
+            if t.kind == "rate":
+                # telemetry: the worker's observed relative throughput
+                self.monitor.observe(t.worker, t.rate, 1.0)
+            elif t.kind == "death":
+                changed = True
+                self.monitor.forget(t.worker)
+                self._commits.pop(t.worker, None)
+            elif t.kind == "join":
+                changed = True
+        if changed:
+            self.epoch += 1
+        if self.keep_transition_log:
+            self.transitions.extend(transitions)
+        for host, step in self.transport.commit_reports():
+            self.report_commit(host, step)
+        for t in transitions:
+            for fn in self._subs.get(t.kind, ()):
+                fn(t)
+        return transitions
+
+    # -- straggler-aware work planning ---------------------------------
+    def plan_split(self, global_batch: int, *,
+                   alive: Optional[Sequence[int]] = None,
+                   threshold: float = 0.5, multiple: int = 1
+                   ) -> Tuple[Dict[int, int], Tuple[int, ...]]:
+        """DBS batch split over the (given or current) alive set:
+        uniform while nobody lags, throughput-proportional once the
+        monitor flags a straggler.  Returns (split, flagged)."""
+        ids = tuple(alive) if alive is not None else self.alive()
+        return replan_on_straggle(self.monitor, ids, global_batch,
+                                  threshold=threshold, multiple=multiple)
+
+    # -- multi-host checkpoint consistency -----------------------------
+    def report_commit(self, host: int, step: Optional[int]) -> None:
+        """Record a host's last durably committed checkpoint step.  A
+        report from a host the membership already declared dead is
+        dropped (a stale heartbeat can arrive in the same poll as the
+        death — it must not resurrect the corpse's floor)."""
+        if step is None:
+            return
+        ws = self.membership.workers.get(host)
+        if ws is not None and ws.status == DEAD:
+            return
+        self._commits[host] = int(step)
+
+    def rewind_step(self) -> Optional[int]:
+        """The fleet-wide safe recovery step: the minimum committed step
+        over surviving reporting hosts (None until any host reports).
+        Restoring newer than this would leave some host without its
+        shard of the checkpoint; a death drops the host's report (its
+        shards are rebuilt from the survivors' floor)."""
+        return min(self._commits.values()) if self._commits else None
+
+    def committed_steps(self) -> Dict[int, int]:
+        return dict(self._commits)
+
+    # -- placement -----------------------------------------------------
+    def place_rows(self, tree_w: Pytree,
+                   worker_ids: Sequence[int]) -> Pytree:
+        """device_put a (W, ...)-stacked pytree onto the surviving
+        hosts' device after a reshard (the shrunken mesh).
+
+        A single stacked array has ONE placement, so this is meaningful
+        exactly when the transport maps every surviving host to the same
+        device (always true on a 1-device CI/laptop; also true whenever
+        a fleet shares an accelerator).  When survivors map to several
+        devices, per-row placement is a data-plane concern this driver
+        doesn't own yet — the stacked compute runs on the driver host —
+        so the tree is returned unchanged (see ROADMAP: multi-host data
+        plane).  Identity when the transport has no host -> device map
+        (simulated transports)."""
+        devmap = self.transport.host_devices()
+        devices = {devmap[w] for w in worker_ids if w in devmap}
+        if len(devices) != 1 or len(devmap) == 0:
+            return tree_w
+        import jax
+        dev = devices.pop()
+        return jax.device_put(tree_w, dev)
+
+    # -- lifecycle -----------------------------------------------------
+    def close(self) -> None:
+        self.transport.close()
+
+    def __enter__(self) -> "Coordinator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,45 @@
+"""SimTransport: the trace-driven simulated clock as a Transport.
+
+The original elastic/serving stack drove `Membership.advance(step)`
+directly from a `FailureTrace`; this transport is that exact event
+source behind the `Transport` interface — `poll(step)` returns
+`trace.at(step)` and nothing else, so every pre-existing test,
+benchmark, and goodput number is bit-identical under the coordinator
+refactor (`Membership.apply(step, trace.at(step))` is by construction
+the same computation `advance(step)` always did).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.elastic.membership import FailureTrace, TraceEvent
+
+from repro.cluster.transport import Transport
+
+
+class SimTransport(Transport):
+    def __init__(self, trace: Optional[FailureTrace] = None):
+        self.trace = trace or FailureTrace()
+        # simulated hosts can still report commit steps (the multi-host
+        # checkpoint rewind path is transport-agnostic): queued here by
+        # `report_commit`, drained by the coordinator each poll
+        self._commits: List = []
+
+    def poll(self, step: int) -> List[TraceEvent]:
+        return list(self.trace.at(step))
+
+    def report_commit(self, host: int, step: int) -> None:
+        """Simulated heartbeat piggyback for tests/drivers that model
+        several hosts on one process."""
+        self._commits.append((host, step))
+
+    def commit_reports(self):
+        out, self._commits = self._commits, []
+        return out
+
+    def host_devices(self) -> Dict[int, Any]:
+        return {}
+
+    def captured_trace(self) -> FailureTrace:
+        """A simulated run observes exactly its input trace."""
+        return self.trace

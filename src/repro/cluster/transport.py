@@ -1,0 +1,78 @@
+"""Transport ABC: where the coordinator's membership events come from.
+
+A transport is an **observation source**, not a policy: each `poll(step)`
+returns the raw failure-detector events it observed since the previous
+poll, already translated into the replayable trace vocabulary
+(`elastic.membership.TraceEvent`: fail / hang / recover / join / slow).
+The `cluster.Coordinator` feeds those events into the one shared
+`Membership` state machine, so SUSPECT/DEAD escalation, event ordering,
+and generation fencing behave identically no matter where the events
+came from:
+
+  * `sim.SimTransport`  — events come from a `FailureTrace` keyed by the
+    simulated wall step.  Bit-exact determinism: replaying a trace gives
+    the identical transition log every time.
+  * `proc.ProcTransport` — events are observed from real OS processes
+    (subprocess workers heartbeating line-JSON over pipes): a worker
+    process exiting is a `fail`, heartbeat silence is a `hang`, resumed
+    beats are a `recover`, a newly spawned process is a `join`, and a
+    self-reported rate change is a `slow`.
+
+Every transport also *captures* the events it emitted (`captured_trace`)
+in the same `FailureTrace` JSON format, so a live ProcTransport incident
+replays deterministically under SimTransport — one trace format drives
+simulation, real processes, and the test suite.
+
+This module is intentionally stdlib-only: `ProcTransport` worker
+processes are spawned with this package on their import path, and they
+must not pay (or depend on) the jax import.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Tuple
+
+
+class Transport(abc.ABC):
+    """Event source driven by the coordinator's wall clock.
+
+    Lifecycle: `start(num_workers)` once, then `poll(step)` with strictly
+    increasing wall steps, then `close()`.  `poll` must return the events
+    to apply AT that step — the coordinator stamps nothing; transports
+    own the mapping from observation time to wall step."""
+
+    def start(self, num_workers: int) -> None:
+        """Bring up the initial worker set (no-op for simulated time).
+        Must be idempotent: callers may pre-start a transport before
+        handing it to the coordinator."""
+
+    @abc.abstractmethod
+    def poll(self, step: int) -> List[Any]:
+        """Detector events (TraceEvents) observed for this wall step."""
+
+    def commit_reports(self) -> List[Tuple[int, int]]:
+        """Drained (host id, last committed checkpoint step) reports that
+        arrived since the previous poll (heartbeat piggyback).  Hosts may
+        also report directly via `Coordinator.report_commit`."""
+        return []
+
+    def host_devices(self) -> Dict[int, Any]:
+        """Worker id -> the accelerator device its resharded state rows
+        should be `device_put` onto (empty: leave placement to jax)."""
+        return {}
+
+    @abc.abstractmethod
+    def captured_trace(self):
+        """Everything this transport observed, as a replayable
+        `FailureTrace` (the trace-capture path: live incident ->
+        deterministic SimTransport test case)."""
+
+    def close(self) -> None:
+        """Tear down workers/queues (idempotent)."""
+
+    # -- context manager ----------------------------------------------
+    def __enter__(self) -> "Transport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

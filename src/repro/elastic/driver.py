@@ -1,5 +1,11 @@
 """Elastic run loops: deterministic fault-injection driver + LM trainer.
 
+Both loops subscribe to the `repro.cluster.Coordinator` control plane
+(membership, epochs, straggler telemetry, commit-step floors) — the same
+authority the serving fleet uses — fed by a pluggable transport: the
+trace-driven simulated clock (default) or real multi-process heartbeat
+workers (`--transport=proc`).
+
 Two entry points share the same membership / reshard / recovery machinery:
 
 * `run_elastic` — a fully deterministic simulation on a controlled
@@ -29,14 +35,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# NOTE: repro.cluster is imported lazily inside the run loops:
+# cluster.coordinator imports this package's membership/straggler
+# submodules, so a top-level import here would cycle when repro.cluster
+# is the entry point.
 from repro.core import data_parallel as DP
-from repro.elastic.membership import FailureTrace, Membership, Transition
+from repro.elastic.membership import FailureTrace, Transition
 from repro.elastic.recovery import (BoundedStalenessContinuation,
                                     EASGDCenterSurvival,
                                     SyncCheckpointRestore)
 from repro.elastic.reshard import save_stacked
-from repro.elastic.straggler import (ThroughputMonitor, replan_on_straggle,
-                                     step_time)
+from repro.elastic.straggler import step_time
 from repro.optim.optimizers import sgd_momentum
 
 Pytree = Any
@@ -92,12 +101,15 @@ class ElasticProblem:
 
     def stack(self, ids: Sequence[int], step: int,
               split: Dict[int, int], K: int = 0) -> Dict[str, np.ndarray]:
-        """Stacked batches: (W, n_max, ...) or (W, K, n, ...) when K>0."""
+        """Stacked batches: (W, n_max, ...) or (W, K, n_max, ...) when K>0.
+        Ragged splits ride the rectangular stack either way: a worker with
+        fewer rows pads to n_max with weight-0 rows."""
         if K:
-            n = max(split[w] for w in ids)
+            n_max = max(split[w] for w in ids)
             per_w = []
             for w in ids:
-                ks = [self.sample(w, step * K + k, n, n) for k in range(K)]
+                ks = [self.sample(w, step * K + k, split[w], n_max)
+                      for k in range(K)]
                 per_w.append({key: np.stack([b[key] for b in ks])
                               for key in ks[0]})
         else:
@@ -130,6 +142,9 @@ class ElasticRunResult:
     transitions: List[Transition]
     final_alive: Tuple[int, ...]
     splits_replanned: int = 0
+    # local modes: the final (W', ...)-stacked per-worker params, so the
+    # cross-transport suite can compare survivor rows bit-exactly
+    stacked_params: Any = None
 
     @property
     def goodput(self) -> float:
@@ -147,7 +162,8 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 heartbeat_timeout: int = 3, restore_penalty: float = 2.0,
                 straggle_threshold: float = 0.5,
                 easgd_rho: float = 0.5,
-                async_ckpt: bool = False) -> ElasticRunResult:
+                async_ckpt: bool = False,
+                transport=None) -> ElasticRunResult:
     """Run `steps` elastic training rounds under a failure trace.
 
     restore_penalty: simulated restore cost, in units of one nominal
@@ -157,42 +173,75 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
     (`AsyncCheckpointer`); recovery waits for the last *committed* step,
     so the training trajectory — losses, rewind targets, goodput — is
     bit-identical to blocking saves (tests/test_elastic.py pins this).
+
+    transport: a `cluster.Transport` supplying membership events
+    (default: `SimTransport(trace)` — the deterministic simulated
+    clock).  Passing `ProcTransport(inject=trace)` runs the control
+    plane against real worker processes; the numeric trajectory is
+    bit-identical because the membership transition log is
+    (tests/test_cluster.py pins the equivalence).  The transport is
+    closed before returning.
     """
+    from repro.cluster.coordinator import Coordinator
+    from repro.cluster.sim import SimTransport
+
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if mode == "sync" and ckpt_dir is None:
         raise ValueError("sync mode needs ckpt_dir for recovery")
+    if transport is not None and trace is not None:
+        # a transport brings its own event source; silently ignoring the
+        # trace would run failure-free and look like valid results
+        raise ValueError("pass either trace= or transport= (put the "
+                         "trace inside the transport, e.g. "
+                         "ProcTransport(inject=trace))")
 
-    membership = Membership(workers, trace or FailureTrace(),
-                            heartbeat_timeout=heartbeat_timeout)
-    monitor = ThroughputMonitor()
+    coord = Coordinator(transport or SimTransport(trace or FailureTrace()),
+                        workers, heartbeat_timeout=heartbeat_timeout)
     opt = sgd_momentum(lambda s: lr, momentum=0.0)
     loss_fn = problem.loss_fn
     nominal_t = global_batch / workers  # one uniform worker's step work
 
     # ---- per-mode state -------------------------------------------------
-    ids = list(membership.alive())
+    # setup failures here unwind before the main loop's finally is armed,
+    # so close the coordinator (live ProcTransport workers) explicitly
+    ids = list(coord.alive())
     stacked_ckpt = None
-    if mode == "sync":
-        params = problem.init_params()
-        opt_state = opt.init(params)
-        policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last,
-                                       async_save=async_ckpt)
-        policy.checkpoint(0, params, opt_state)
-    else:
-        if async_ckpt and ckpt_dir:
-            from repro.checkpoint import AsyncCheckpointer
-            stacked_ckpt = AsyncCheckpointer(ckpt_dir, keep_last=keep_last)
-        p0 = problem.init_params()
-        params_w = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p[None], (workers,) + p.shape), p0)
-        if mode == "local_sgd":
-            opt_w = jax.vmap(opt.init)(params_w)
-            policy = BoundedStalenessContinuation()
+    policy = None
+    try:
+        if mode == "sync":
+            params = problem.init_params()
+            opt_state = opt.init(params)
+            # host=-1: the driver's replicated-state saver is a logical
+            # host outside the worker id space, so a worker death never
+            # drops its commit floor from the coordinator aggregate
+            policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last,
+                                           async_save=async_ckpt,
+                                           coordinator=coord, host=-1)
+            policy.checkpoint(0, params, opt_state)
         else:
-            center = p0
-            policy = EASGDCenterSurvival()
-            easgd_cfg = DP.EASGDConfig(lr=lr, rho=easgd_rho)
+            if async_ckpt and ckpt_dir:
+                from repro.checkpoint import AsyncCheckpointer
+                stacked_ckpt = AsyncCheckpointer(ckpt_dir,
+                                                 keep_last=keep_last)
+            p0 = problem.init_params()
+            params_w = jax.tree_util.tree_map(
+                lambda p: jnp.broadcast_to(p[None], (workers,) + p.shape),
+                p0)
+            if mode == "local_sgd":
+                opt_w = jax.vmap(opt.init)(params_w)
+                policy = BoundedStalenessContinuation()
+            else:
+                center = p0
+                policy = EASGDCenterSurvival()
+                easgd_cfg = DP.EASGDConfig(lr=lr, rho=easgd_rho)
+    except BaseException:
+        if stacked_ckpt is not None:
+            stacked_ckpt.close(wait=False)
+        if policy is not None and hasattr(policy, "close"):
+            policy.close()
+        coord.close()
+        raise
 
     losses: Dict[int, float] = {}
     recoveries: List[RecoveryRecord] = []
@@ -206,18 +255,15 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
 
     try:
         while train_step < steps:
-            transitions = membership.advance(wall)
+            # rate telemetry -> coordinator monitor, death -> forget: the
+            # control loop now lives in Coordinator.advance, shared with
+            # the serving fleet
+            transitions = coord.advance(wall)
             all_transitions.extend(transitions)
             deaths = [t for t in transitions if t.kind == "death"]
             joins = [t for t in transitions if t.kind == "join"]
-            for t in transitions:
-                if t.kind == "rate":
-                    # telemetry: the slow worker's observed samples/sec drops
-                    monitor.observe(t.worker, nominal_t, nominal_t / t.rate)
-            for t in deaths:
-                monitor.forget(t.worker)
 
-            new_ids = list(membership.alive())
+            new_ids = list(coord.alive())
             if not new_ids:
                 raise RuntimeError(f"wall step {wall}: all workers dead")
 
@@ -237,26 +283,29 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 elif mode == "local_sgd":
                     st = policy.apply({"params": params_w, "opt": opt_w},
                                       ids, new_ids)
-                    params_w, opt_w = st["params"], st["opt"]
+                    # survivor rows land on their host's device on the
+                    # shrunken mesh (identity under simulated transports)
+                    params_w = coord.place_rows(st["params"], new_ids)
+                    opt_w = coord.place_rows(st["opt"], new_ids)
                     for d in deaths:
                         recoveries.append(
                             RecoveryRecord(wall, d.worker, d.cause, 0))
                 else:  # easgd
                     params_w, center = policy.apply(params_w, center,
                                                     ids, new_ids)
+                    params_w = coord.place_rows(params_w, new_ids)
                     for d in deaths:
                         recoveries.append(
                             RecoveryRecord(wall, d.worker, d.cause, 0))
             ids = new_ids
 
-            rates = membership.rates()
+            rates = coord.rates()
 
             # ---- one training round ----------------------------------------
             if mode == "sync":
-                # straggler mitigation: DBS split only on the sync barrier
-                # (local rounds keep uniform work; see ROADMAP open items)
-                split, slow = replan_on_straggle(
-                    monitor, ids, global_batch, threshold=straggle_threshold)
+                # straggler mitigation: DBS split on the sync barrier
+                split, slow = coord.plan_split(global_batch, alive=ids,
+                                               threshold=straggle_threshold)
                 if slow:
                     replans += 1
                 batch = problem.stack(ids, train_step, split)
@@ -274,12 +323,27 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 if ckpt_every and (train_step + 1) % ckpt_every == 0:
                     policy.checkpoint(train_step + 1, params, opt_state)
             else:
-                # rounded (not floored) so a death doesn't step the per-worker
-                # allocation and conflate quantization with failure cost
+                # ragged local rounds: once the monitor flags a straggler
+                # the per-local-step rows go through the same DBS split as
+                # the sync barrier, so a slow worker sheds work in the
+                # local modes too.  The healthy path stays UNIFORM —
+                # equal-rate workers must not train on unequal data just
+                # because the budget doesn't divide evenly — and the DBS
+                # path plans over the SAME round total, so crossing the
+                # flag edge reallocates rows without changing the batch
+                # size.  Rounded (not floored) so a death doesn't step
+                # the allocation and conflate quantization with failure
+                # cost.
                 n = max(1, round(global_batch / (len(ids) * K)))
-                uniform = {w: n for w in ids}
-                samples_done += len(ids) * K * n
-                batch = problem.stack(ids, train_step, uniform, K=K)
+                slow = coord.monitor.stragglers(ids, straggle_threshold)
+                if slow:
+                    replans += 1
+                    split, _ = coord.plan_split(n * len(ids), alive=ids,
+                                                threshold=straggle_threshold)
+                else:
+                    split = {w: n for w in ids}
+                samples_done += K * sum(split.values())
+                batch = problem.stack(ids, train_step, split, K=K)
                 batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
                 if mode == "local_sgd":
                     params_w, opt_w, m = DP.local_sgd_round(
@@ -288,7 +352,7 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                     params_w, center, m = DP.easgd_round(
                         loss_fn, params_w, center, batches_wk, easgd_cfg)
                 losses[train_step] = float(m["loss"])
-                sim_time += step_time({w: uniform[w] * K for w in ids}, rates)
+                sim_time += step_time({w: split[w] * K for w in ids}, rates)
                 if ckpt_dir and ckpt_every and (train_step + 1) % ckpt_every == 0:
                     stacked = ({"params": params_w, "opt": opt_w}
                                if mode == "local_sgd" else {"params": params_w})
@@ -324,6 +388,7 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
             policy.close()
         elif stacked_ckpt is not None:
             stacked_ckpt.close(wait=False)
+        coord.close()  # tears down ProcTransport workers; sim: no-op
 
     if mode == "sync":
         final_params = params
@@ -342,7 +407,8 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
         final_loss=problem.full_loss(final_params), steps=steps,
         sim_time=sim_time, samples=samples,
         recoveries=recoveries, transitions=all_transitions,
-        final_alive=tuple(ids), splits_replanned=replans)
+        final_alive=tuple(ids), splits_replanned=replans,
+        stacked_params=None if mode == "sync" else params_w)
 
 
 # ---------------------------------------------------------------------------
@@ -357,23 +423,45 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
     global batch (args.batch rows) is assembled from per-worker slices
     sized by the current (possibly DBS-replanned) split.  Deaths restore
     the last checkpoint and rewind; joins just widen the split.
+
+    args.transport selects the control plane: "sim" (default) replays
+    the failure trace on the simulated clock; "proc" runs real worker
+    processes (`cluster.ProcTransport`) with the trace injected against
+    them — same transitions, same training trajectory, real heartbeats.
     """
+    from repro.cluster.coordinator import Coordinator
+    from repro.cluster.sim import SimTransport
+
     trace = (FailureTrace.load(args.failure_trace)
              if args.failure_trace else FailureTrace())
     W0 = args.workers
-    membership = Membership(W0, trace)
-    monitor = ThroughputMonitor()
-    policy = SyncCheckpointRestore(args.ckpt_dir,
-                                   keep_last=args.keep_last,
-                                   async_save=getattr(args, "async_ckpt",
-                                                      False))
-    ckpt_every = args.ckpt_every or 20
-    policy.checkpoint(step0, params, opt_state, {"arch": args.arch})
+    if getattr(args, "transport", "sim") == "proc":
+        from repro.cluster.proc import ProcTransport
+        coord = Coordinator(ProcTransport(inject=trace), W0)
+    else:
+        coord = Coordinator(SimTransport(trace), W0)
+    policy = None
+    try:
+        policy = SyncCheckpointRestore(args.ckpt_dir,
+                                       keep_last=args.keep_last,
+                                       async_save=getattr(args,
+                                                          "async_ckpt",
+                                                          False),
+                                       coordinator=coord, host=-1)
+        ckpt_every = args.ckpt_every or 20
+        policy.checkpoint(step0, params, opt_state, {"arch": args.arch})
 
-    # worker id -> pipeline; ids from scale-ups get fresh shards lazily
-    max_shards = W0 + 16
-    pipes = {w: pipe_factory(w, max_shards) for w in range(W0)}
-    iters = {w: iter(p) for w, p in pipes.items()}
+        # worker id -> pipeline; scale-up ids get fresh shards lazily
+        max_shards = W0 + 16
+        pipes = {w: pipe_factory(w, max_shards) for w in range(W0)}
+        iters = {w: iter(p) for w, p in pipes.items()}
+    except BaseException:
+        # setup failed before the loop's finally was armed: don't leak
+        # live ProcTransport workers (or the ckpt writer, if it started)
+        if policy is not None:
+            policy.close()
+        coord.close()
+        raise
 
     def rows_from(wid: int, n: int) -> Dict[str, np.ndarray]:
         if wid not in iters:
@@ -388,13 +476,8 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
 
     try:
         while train_step < step0 + args.steps:
-            transitions = membership.advance(wall)
+            transitions = coord.advance(wall)
             deaths = [t for t in transitions if t.kind == "death"]
-            for t in transitions:
-                if t.kind == "rate":
-                    monitor.observe(t.worker, 1.0, 1.0 / t.rate)
-            for t in deaths:
-                monitor.forget(t.worker)
             if deaths:
                 params, opt_state, restored = policy.recover(params, opt_state)
                 lost = train_step - restored
@@ -404,13 +487,13 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
                 print(f"[elastic] wall {wall}: worker(s) "
                       f"{[d.worker for d in deaths]} died ({deaths[0].cause}); "
                       f"restored step {restored} (lost {lost} steps), "
-                      f"{len(membership.alive())} survivors", flush=True)
+                      f"{len(coord.alive())} survivors", flush=True)
                 train_step = restored
 
-            alive = membership.alive()
+            alive = coord.alive()
             if not alive:
                 raise RuntimeError(f"wall step {wall}: all workers dead")
-            split, slow = replan_on_straggle(monitor, alive, args.batch)
+            split, slow = coord.plan_split(args.batch, alive=alive)
             if slow and wall % args.log_every == 0:
                 print(f"[elastic] stragglers {list(slow)}; split "
                       f"{[split[w] for w in alive]}", flush=True)
@@ -439,6 +522,9 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
         policy.wait()  # barrier: the final save is durable before we return
     finally:
         policy.close()  # never leak the writer past an exception unwind
+        coord.close()   # tears down ProcTransport workers; sim: no-op
     return {"losses": [losses[s] for s in sorted(losses)],
             "recoveries": recoveries, "params": params,
-            "opt_state": opt_state, "final_alive": membership.alive()}
+            "opt_state": opt_state, "final_alive": coord.alive(),
+            "transitions": coord.transition_log(),
+            "captured_trace": coord.transport.captured_trace()}

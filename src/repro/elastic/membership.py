@@ -55,12 +55,22 @@ class TraceEvent:
 
 @dataclasses.dataclass(frozen=True)
 class Transition:
-    """An observed membership change (what recovery policies react to)."""
+    """An observed membership change (what recovery policies react to).
+
+    "suspect" fires exactly once on the ALIVE -> SUSPECT edge of the
+    heartbeat scan — the earliest moment a consumer may act on a likely
+    (but not yet declared) failure, e.g. the serving fleet's preemptive
+    drain.  It never bumps the generation: suspicion is reversible."""
     step: int
-    kind: str          # "death" | "join" | "rate"
+    kind: str          # "death" | "join" | "rate" | "suspect"
     worker: int
     cause: str = ""    # death: "fail" | "timeout"
     rate: float = 1.0  # new relative throughput for "rate"
+
+    def as_tuple(self) -> Tuple:
+        """Canonical serializable form — the unit of the cross-transport
+        equivalence log (cluster.Coordinator.transition_log)."""
+        return (self.step, self.kind, self.worker, self.cause, self.rate)
 
 
 class FailureTrace:
@@ -142,6 +152,19 @@ class Membership:
 
     # -- the state machine --------------------------------------------
     def advance(self, step: int) -> List[Transition]:
+        """Trace-driven stepping: apply this wall step's trace events."""
+        return self.apply(step, self.trace.at(step))
+
+    def apply(self, step: int,
+              events: Iterable[TraceEvent]) -> List[Transition]:
+        """Apply externally observed detector events for one wall step.
+
+        This is the transport-agnostic core: `advance` feeds it from the
+        replayable trace, while `cluster.Coordinator` feeds it whatever
+        its Transport observed (simulated events or real multi-process
+        heartbeat telemetry).  Either way the policy — event ordering,
+        SUSPECT/DEAD escalation, generation fencing — is defined once,
+        here."""
         if step <= self._last_step:
             raise ValueError(f"advance() must move forward "
                              f"({step} <= {self._last_step})")
@@ -149,8 +172,9 @@ class Membership:
         deaths: List[Transition] = []
         joins: List[Transition] = []
         rates: List[Transition] = []
+        suspects: List[Transition] = []
 
-        for ev in self.trace.at(step):
+        for ev in events:
             if ev.kind == "join":
                 wid = ev.worker if ev.worker not in self.workers \
                     else self.spawn_id()
@@ -189,7 +213,9 @@ class Membership:
                 ws.status = DEAD
                 deaths.append(Transition(step, "death", wid, cause="timeout"))
             elif silent >= self.suspect_after:
+                if ws.status != SUSPECT:
+                    suspects.append(Transition(step, "suspect", wid))
                 ws.status = SUSPECT
 
         self.generation += len(deaths) + len(joins)
-        return deaths + joins + rates
+        return deaths + joins + rates + suspects

@@ -76,10 +76,21 @@ class SyncCheckpointRestore:
     half-written one — and if the in-flight save turns out to have failed
     (its error is recorded in `writer_errors`), recovery falls back to
     the previous committed checkpoint: the failed step is simply redone
-    post-rewind."""
+    post-rewind.
+
+    coordinator (a `cluster.Coordinator`) makes recovery multi-host
+    consistent: every save/recover reports this host's last committed
+    step (`AsyncCheckpointer.last_committed_step()`), and the rewind
+    target becomes the coordinator's fleet-wide MINIMUM over surviving
+    hosts — a checkpoint only exists cluster-wide once every host has
+    committed its shard, so restoring any newer step would leave some
+    host empty-handed.  With a single reporting host this degenerates to
+    exactly the local behavior (the minimum of one report is itself)."""
     ckpt_dir: str
     keep_last: int = 3
     async_save: bool = False
+    coordinator: Optional[Any] = None
+    host: int = 0
     saved_step: int = -1
 
     def __post_init__(self):
@@ -99,7 +110,18 @@ class SyncCheckpointRestore:
             path = save_checkpoint(self.ckpt_dir, step, tree, meta,
                                    keep_last=self.keep_last)
         self.saved_step = step
+        self._report_commit()
         return path
+
+    def _report_commit(self) -> None:
+        """Tell the coordinator what this host has durably committed
+        (async: only what the writer has renamed in; blocking: the save
+        just made)."""
+        if self.coordinator is None:
+            return
+        committed = (self._ckpt.last_committed_step()
+                     if self._ckpt is not None else self.saved_step)
+        self.coordinator.report_commit(self.host, committed)
 
     def recover(self, params: Pytree, opt_state: Pytree
                 ) -> Tuple[Pytree, Pytree, int]:
@@ -113,6 +135,11 @@ class SyncCheckpointRestore:
             except AsyncCheckpointError as e:
                 self.writer_errors.append(e)
             step = self._ckpt.last_committed_step()
+        if self.coordinator is not None:
+            # multi-host consistency: refresh our own floor, then rewind
+            # to the fleet-wide minimum committed step
+            self._report_commit()
+            step = self.coordinator.rewind_step()
         abs_tree = jax.eval_shape(
             lambda: {"params": params, "opt": opt_state})
         tree, meta = restore_checkpoint(self.ckpt_dir, abs_tree, step=step)

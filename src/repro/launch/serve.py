@@ -159,14 +159,22 @@ def _serve_fleet(params, cfg, args):
 
     trace = (FailureTrace.load(args.failure_trace)
              if args.failure_trace else None)
+    transport = None
+    if args.transport == "proc":
+        from repro.cluster import ProcTransport
+        transport = ProcTransport(inject=trace)
     n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
     fleet = ServeFleet(params, cfg, replicas=args.replicas,
                        num_slots=args.batch,
                        cache_len=args.prompt_len + args.gen + n_prefix,
-                       trace=trace)
+                       trace=None if transport else trace,
+                       transport=transport)
     reqs = _make_stream(cfg, args)
     t0 = time.time()
-    finished = fleet.run(reqs)
+    try:
+        finished = fleet.run(reqs)
+    finally:
+        fleet.close()
     dt = time.time() - t0
     st = fleet.stats()
     print(f"arch={cfg.name} replicas={args.replicas} slots={args.batch} "
@@ -201,6 +209,12 @@ def serve(argv=None) -> dict:
                     help="--replicas: FailureTrace JSON to replay "
                          "(fail/hang/recover/join/slow events against "
                          "replica ids)")
+    ap.add_argument("--transport", default="sim", choices=["sim", "proc"],
+                    help="--replicas control plane: 'sim' replays the "
+                         "trace on the simulated clock; 'proc' backs "
+                         "each replica with a real heartbeat process "
+                         "(repro.cluster.ProcTransport) and injects the "
+                         "trace against them")
     ap.add_argument("--requests", type=int, default=16,
                     help="--continuous/--replicas: requests in the stream")
     ap.add_argument("--data", type=int, default=1)

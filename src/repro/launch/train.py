@@ -71,6 +71,12 @@ def train(argv=None) -> dict:
                          "(repro.elastic.membership.FailureTrace)")
     ap.add_argument("--workers", type=int, default=4,
                     help="logical data-parallel workers for --elastic")
+    ap.add_argument("--transport", default="sim", choices=["sim", "proc"],
+                    help="--elastic control plane: 'sim' replays the "
+                         "failure trace on the simulated clock; 'proc' "
+                         "runs real worker processes with per-host "
+                         "heartbeat RPC and injects the trace against "
+                         "them (repro.cluster.ProcTransport)")
     ap.add_argument("--keep-last", type=int, default=3,
                     help="checkpoint retention for --elastic")
     ap.add_argument("--async-ckpt", dest="async_ckpt", action="store_true",
@@ -143,7 +149,8 @@ def train(argv=None) -> dict:
                     "entropy_floor": entropy_floor,
                     "params": out["params"],
                     "recoveries": out["recoveries"],
-                    "final_alive": out["final_alive"]}
+                    "final_alive": out["final_alive"],
+                    "transitions": out["transitions"]}
 
         saver = (AsyncCheckpointer(args.ckpt_dir)
                  if args.async_ckpt and args.ckpt_dir else None)

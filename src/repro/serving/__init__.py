@@ -41,9 +41,11 @@ instead of being gated by the slowest request in each static batch
 
 The fleet layer (`fleet.py` / `router.py`) lifts the same playbook one
 level up — from slots within a replica to replicas within a fleet: the
-trace-driven `elastic.membership` failure detector drives replica
-drain/re-admit (crash, hang-to-timeout), scale-up joins, and a
-throughput-EMA router that weights admission away from stragglers
+fleet subscribes to the shared `repro.cluster.Coordinator` control plane
+(the same failure detector elastic training uses, over a simulated clock
+or real heartbeat processes), which drives replica drain/re-admit
+(crash, hang-to-timeout, preemptive drain on SUSPECT), scale-up joins,
+and a throughput-EMA router that weights admission away from stragglers
 (`benchmarks/bench_elastic_serving.py` pins the recovery cost).
 
 Public API:

@@ -1,13 +1,22 @@
 """Elastic multi-replica serving: the training-side fault model applied
 to a fleet of `ServeEngine` slot pools.
 
-Every replica is one continuous-batching engine; the fleet is driven by
-the SAME trace-driven `elastic.membership` state machine that powers
-elastic training, so every serving fault scenario — crash, hang that
-escalates through the heartbeat timeout, scale-up join, straggler — is a
-replayable `FailureTrace` and the whole run is a deterministic function
-of it:
+Every replica is one continuous-batching engine; the fleet subscribes to
+the SAME `cluster.Coordinator` control plane that powers elastic
+training — one membership authority, one failure detector — so every
+serving fault scenario — crash, hang that escalates through the
+heartbeat timeout, scale-up join, straggler — is a replayable
+`FailureTrace` and the whole run is a deterministic function of it:
 
+  suspect                the failure detector stops trusting a silent
+                         replica BEFORE declaring it dead; the fleet
+                         **preemptively drains** its in-flight requests
+                         into prefix continuations immediately, instead
+                         of letting that work wait out the heartbeat
+                         timeout.  A false positive (the replica
+                         recovers) costs only the continuations'
+                         re-prefill; a true positive saves the whole
+                         SUSPECT->DEAD window.
   fail / hang->timeout   the dead replica is **drained**: host-harvested
                          tokens are preserved (they were streamed), the
                          remaining budget is requeued at the router as a
@@ -39,7 +48,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.elastic.membership import ALIVE, FailureTrace, Membership
+from repro.cluster.coordinator import Coordinator
+from repro.cluster.sim import SimTransport
+from repro.elastic.membership import ALIVE, FailureTrace
 from repro.elastic.recovery import ServingDrainReadmit
 from repro.serving.engine import CHUNK_CAP, ServeEngine, ServeProgram
 from repro.serving.request import (FinishedRequest, Request,
@@ -64,9 +75,17 @@ class ServeFleet:
     def __init__(self, params, cfg, *, replicas: int, num_slots: int,
                  cache_len: int, trace: Optional[FailureTrace] = None,
                  heartbeat_timeout: int = 3, chunk_cap: int = CHUNK_CAP,
-                 router_decay: float = 0.5):
+                 router_decay: float = 0.5, transport=None,
+                 preemptive_drain: bool = True):
         if replicas < 1:
             raise ValueError("need at least one replica")
+        if transport is not None and trace is not None:
+            # a transport brings its own event source; silently ignoring
+            # the trace would serve failure-free and look like valid
+            # results
+            raise ValueError("pass either trace= or transport= (put the "
+                             "trace inside the transport, e.g. "
+                             "ProcTransport(inject=trace))")
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -74,17 +93,40 @@ class ServeFleet:
         self.chunk_cap = chunk_cap
         # one compiled program shared by every replica, present and future
         self.program = ServeProgram(cfg, cache_len=cache_len)
-        self.membership = Membership(replicas, trace or FailureTrace(),
-                                     heartbeat_timeout=heartbeat_timeout)
-        self.router = ThroughputRouter(decay=router_decay)
-        self.policy = ServingDrainReadmit()
-        self.replicas: Dict[int, Replica] = {
-            r: self._spawn(r) for r in range(replicas)}
+        # the shared control plane: fail/hang/join/slow semantics live in
+        # the coordinator's membership machine, identical to training's;
+        # the fleet only subscribes to the transitions it must enact (no
+        # cumulative log: a fleet may run indefinitely)
+        self.coordinator = Coordinator(
+            transport or SimTransport(trace or FailureTrace()),
+            replicas, heartbeat_timeout=heartbeat_timeout,
+            keep_transition_log=False)
+        try:
+            self.coordinator.subscribe("death", self._on_death)
+            self.coordinator.subscribe("join", self._on_join)
+            if preemptive_drain:
+                self.coordinator.subscribe("suspect", self._on_suspect)
+            self.router = ThroughputRouter(decay=router_decay)
+            self.policy = ServingDrainReadmit()
+            self.replicas: Dict[int, Replica] = {
+                r: self._spawn(r) for r in range(replicas)}
+        except BaseException:
+            # the coordinator already started the transport (live
+            # ProcTransport workers): a failed replica spawn must not
+            # leak them past a construction that never returned
+            self.coordinator.close()
+            raise
         self.finished: List[FinishedRequest] = []
         self.wall = 0
         self.drains = 0
+        self.preemptive_drains = 0
         self.submitted = 0
         self._n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+
+    @property
+    def membership(self):
+        """The coordinator's membership view (read-only convenience)."""
+        return self.coordinator.membership
 
     def _spawn(self, rid: int) -> Replica:
         return Replica(rid, ServeEngine(
@@ -115,6 +157,32 @@ class ServeFleet:
         self.router.forget(rid)
         self.drains += 1
 
+    # -- coordinator subscriptions -------------------------------------
+    def _on_death(self, t) -> None:
+        if t.worker in self.replicas:
+            self._drain_dead(t.worker)
+
+    def _on_join(self, t) -> None:
+        self.replicas[t.worker] = self._spawn(t.worker)
+
+    def _on_suspect(self, t) -> None:
+        """Preemptive drain: the moment the detector stops trusting a
+        replica, its in-flight requests become prefix continuations and
+        requeue at the router — they do NOT wait out the heartbeat
+        timeout on a replica that is probably dead.  The replica itself
+        stays up (a false positive may still recover; it rejoins empty
+        and routable).  Already-streamed tokens are preserved and the
+        continuations are deterministic, so completed outputs remain
+        bit-identical to the failure-free run."""
+        rep = self.replicas.get(t.worker)
+        if rep is None or rep.load == 0:
+            return
+        self._collect(rep)
+        conts = self.policy.readmit(rep.engine.drain())
+        if conts:
+            self.router.requeue_front(conts)
+            self.preemptive_drains += 1
+
     def _routable(self) -> Dict[int, Replica]:
         """Replicas the failure detector still trusts with NEW work: ALIVE
         and not suspected.  (A hung-but-undetected replica stays routable —
@@ -129,16 +197,12 @@ class ServeFleet:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One wall tick: membership transitions, routing, execution."""
-        transitions = self.membership.advance(self.wall)
-        for t in transitions:
-            if t.kind == "death" and t.worker in self.replicas:
-                self._drain_dead(t.worker)
-            elif t.kind == "join":
-                self.replicas[t.worker] = self._spawn(t.worker)
-            # "rate" transitions need no explicit handling: the slowdown is
-            # enacted by the credit schedule below and the router's EMA
-            # observes its effect on actual progress
+        """One wall tick: coordinator transitions (enacted through the
+        subscriptions above), routing, execution.  "rate" transitions
+        need no subscription: the slowdown is enacted by the credit
+        schedule below and the router's EMA observes its effect on
+        actual progress."""
+        self.coordinator.advance(self.wall)
 
         if not self.replicas and (self.router.pending or
                                   self.policy.originals):
@@ -219,7 +283,14 @@ class ServeFleet:
             "finished": len(self.finished),
             "submitted": self.submitted,
             "drains": self.drains,
+            "preemptive_drains": self.preemptive_drains,
             "readmitted": self.policy.readmitted,
             "replicas": len(self.replicas),
+            "epoch": self.coordinator.epoch,
             "routed": dict(self.router.routed),
         }
+
+    def close(self) -> None:
+        """Tear down the control plane (ProcTransport workers; no-op for
+        the simulated clock)."""
+        self.coordinator.close()

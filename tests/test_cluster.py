@@ -1,0 +1,346 @@
+"""Cluster control plane (repro.cluster).
+
+The cross-transport contract: the coordinator's membership semantics are
+identical no matter where events come from.  Covers: coordinator-on-sim
+vs raw Membership determinism, the SimTransport/ProcTransport
+equivalence suite (identical transition logs; bit-identical training
+trajectories and survivor parameter rows), trace capture (organic
+process kill and heartbeat silence replay under sim), commit-step
+aggregation over worker heartbeats, multi-host checkpoint rewind to the
+fleet-wide minimum, SUSPECT edge transitions, and host-device row
+placement.
+
+Tests named ``*_proc_*`` spawn real worker processes (the CI
+multihost-smoke job runs exactly those under a timeout).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import Coordinator, ProcTransport, SimTransport
+from repro.elastic import (ElasticProblem, FailureTrace, Membership,
+                           SyncCheckpointRestore, TraceEvent, run_elastic)
+
+CHURN = FailureTrace([
+    TraceEvent(2, "hang", 1),       # SUSPECT at 2 ... recovers in time
+    TraceEvent(3, "recover", 1),
+    TraceEvent(5, "fail", 1),       # then a real crash
+    TraceEvent(8, "join", 1),       # rejoin under a USED id: membership
+                                    # remaps it (ids are never reused) and
+                                    # ProcTransport must mirror the remap
+    TraceEvent(10, "slow", 0, 0.25),  # straggler
+])
+
+
+def drive(coord, steps):
+    for t in range(steps):
+        coord.advance(t)
+    return coord.transition_log()
+
+
+def drive_from(coord, start, end):
+    for t in range(start, end):
+        coord.advance(t)
+    return coord.transition_log()
+
+
+# ---------------------------------------------------------------------------
+# the refactor preserves the membership machine bit-exactly
+# ---------------------------------------------------------------------------
+def test_coordinator_sim_equals_raw_membership():
+    m = Membership(2, CHURN, heartbeat_timeout=3)
+    raw = [tr.as_tuple() for t in range(14) for tr in m.advance(t)]
+    with Coordinator(SimTransport(CHURN), 2, heartbeat_timeout=3) as c:
+        assert drive(c, 14) == raw
+        assert c.alive() == m.alive()
+        assert c.generation == m.generation
+        assert c.rates() == m.rates()
+
+
+def test_suspect_transition_fires_once_on_edge():
+    trace = FailureTrace([TraceEvent(2, "hang", 1)])
+    m = Membership(2, trace, heartbeat_timeout=5, suspect_after=1)
+    log = [tr for t in range(6) for tr in m.advance(t)]  # stop pre-timeout
+    suspects = [tr for tr in log if tr.kind == "suspect"]
+    assert [(s.step, s.worker) for s in suspects] == [(2, 1)]
+    assert m.workers[1].status == "suspect"
+
+
+def test_epoch_bumps_only_on_membership_change():
+    with Coordinator(SimTransport(CHURN), 2, heartbeat_timeout=3) as c:
+        epochs = []
+        for t in range(14):
+            c.advance(t)
+            epochs.append(c.epoch)
+    # one bump for the fail at 5, one for the join at 8; hang/recover/
+    # slow never change membership
+    assert epochs[4] == 0 and epochs[5] == 1
+    assert epochs[7] == 1 and epochs[8] == 2 and epochs[-1] == 2
+
+
+def test_subscribers_see_post_transition_view():
+    seen = []
+    with Coordinator(SimTransport(CHURN), 2, heartbeat_timeout=3) as c:
+        c.subscribe("death", lambda tr: seen.append(
+            ("death", tr.worker, c.alive())))
+        c.subscribe("join", lambda tr: seen.append(
+            ("join", tr.worker, c.alive())))
+        c.subscribe("suspect", lambda tr: seen.append(
+            ("suspect", tr.worker, None)))
+        drive(c, 14)
+    assert seen == [("suspect", 1, None),
+                    ("death", 1, (0,)),
+                    ("join", 2, (0, 2))]
+
+
+# ---------------------------------------------------------------------------
+# cross-transport equivalence (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_proc_transition_log_identical_to_sim():
+    """Same FailureTrace, two transports — 2 real worker processes vs
+    the simulated clock — identical membership transition log."""
+    with Coordinator(SimTransport(CHURN), 2, heartbeat_timeout=3) as c:
+        sim_log = drive(c, 14)
+    proc = ProcTransport(inject=CHURN)
+    with Coordinator(proc, 2, heartbeat_timeout=3) as c:
+        proc_log = drive(c, 14)
+    assert proc_log == sim_log
+    # and what the transport OBSERVED is the trace it was asked to enact
+    cap = [(e.step, e.kind, e.worker, e.rate)
+           for e in proc.captured_trace().events]
+    assert cap == [(e.step, e.kind, e.worker, e.rate)
+                   for e in CHURN.events]
+
+
+def test_proc_training_bit_identical_to_sim():
+    """The same trace through run_elastic on both transports: identical
+    transition log, bit-identical losses AND survivor parameter rows."""
+    problem = ElasticProblem()
+    trace = FailureTrace([TraceEvent(5, "fail", 1),
+                          TraceEvent(12, "slow", 0, 0.5)])
+    kw = dict(mode="local_sgd", workers=3, steps=20, global_batch=24)
+    sim = run_elastic(problem, trace=trace, **kw)
+    proc = run_elastic(problem, transport=ProcTransport(inject=trace), **kw)
+    assert ([t.as_tuple() for t in proc.transitions] ==
+            [t.as_tuple() for t in sim.transitions])
+    assert proc.losses == sim.losses
+    assert proc.final_loss == sim.final_loss
+    assert proc.final_alive == sim.final_alive
+    for a, b in zip(jax.tree_util.tree_leaves(proc.stacked_params),
+                    jax.tree_util.tree_leaves(sim.stacked_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_proc_captured_trace_replays_organic_kill():
+    """Trace capture: a worker killed from OUTSIDE (no injection — a real
+    preemption) is observed as a fail event, and the captured trace
+    replays under SimTransport to the identical transition log."""
+    proc = ProcTransport()
+    with Coordinator(proc, 3, heartbeat_timeout=3) as c:
+        c.advance(0)
+        c.advance(1)
+        proc.kill_worker(1)                   # SIGKILL, mid-"step"
+        live_log = drive_from(c, 2, 8)
+        captured = proc.captured_trace()
+    assert any(e.kind == "fail" and e.worker == 1 for e in captured.events)
+    with Coordinator(SimTransport(captured), 3, heartbeat_timeout=3) as c2:
+        assert drive(c2, 8) == live_log
+    assert c.alive() == (0, 2)
+
+
+def test_proc_organic_silence_escalates_to_timeout():
+    """A worker that stops heartbeating without dying (wedged data plane)
+    is detected by the REAL-time silence threshold, then escalated
+    SUSPECT -> DEAD by the same membership timeout as everywhere else."""
+    proc = ProcTransport(silence_after=0.4)
+    with Coordinator(proc, 2, heartbeat_timeout=3) as c:
+        c.advance(0)
+        # wedge worker 1 out-of-band (command bypasses the inject path)
+        proc._send(proc._workers[1], {"v": "hang"})
+        proc._await_ack(1, "hang")
+        proc._workers[1].silent = False       # let the detector find out
+        proc._workers[1].last_beat = time.monotonic()
+        time.sleep(1.0)                       # silence > silence_after
+        log = drive_from(c, 1, 10)
+        captured = proc.captured_trace()
+    kinds = [(k, w) for _, k, w, _, _ in log]
+    assert ("suspect", 1) in kinds and ("death", 1) in kinds
+    deaths = [t for t in log if t[1] == "death"]
+    assert deaths[0][3] == "timeout"
+    # the capture replays to the same outcome
+    with Coordinator(SimTransport(captured), 2, heartbeat_timeout=3) as c2:
+        replay = drive(c2, 10)
+    assert replay == log
+
+
+# ---------------------------------------------------------------------------
+# commit-step aggregation + multi-host checkpoint rewind
+# ---------------------------------------------------------------------------
+def test_proc_rejoin_remap_keeps_commits_and_devices():
+    """A host that rejoins after death gets a REMAPPED id; the real
+    process must live under that id so its commit reports enter the
+    rewind floor and host_devices covers it (regression: the transport
+    once kept the corpse's id, so the joiner's reports were dropped as
+    stale-from-a-dead-host)."""
+    trace = FailureTrace([TraceEvent(1, "fail", 1),
+                          TraceEvent(3, "join", 1)])   # remaps to wid 2
+    proc = ProcTransport(inject=trace)
+    with Coordinator(proc, 2, heartbeat_timeout=3) as c:
+        log = drive(c, 5)
+        assert (3, "join", 2, "", 1.0) in log
+        assert c.alive() == (0, 2)
+        assert set(proc.host_devices()) == {0, 2}
+        proc.set_commit(2, 17)
+        deadline = time.time() + 10
+        while 2 not in c.committed_steps() and time.time() < deadline:
+            c.advance(c.membership._last_step + 1)
+        assert c.committed_steps()[2] == 17
+
+
+def test_proc_commit_reports_ride_heartbeats():
+    proc = ProcTransport()
+    with Coordinator(proc, 3) as c:
+        proc.set_commit(0, 30)
+        proc.set_commit(1, 10)
+        proc.set_commit(2, 20)
+        deadline = time.time() + 10
+        while len(c.committed_steps()) < 3 and time.time() < deadline:
+            c.advance(c.membership._last_step + 1)
+        assert c.committed_steps() == {0: 30, 1: 10, 2: 20}
+        assert c.rewind_step() == 10
+
+
+def test_multihost_rewind_lands_on_fleet_minimum(tmp_path):
+    """Hosts commit different steps (host 1 lags); recovery on EVERY
+    host rewinds to the fleet-wide minimum — the only step all hosts
+    have durably committed — not to each host's own latest."""
+    coord = Coordinator(SimTransport(), 3)
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    opt = {"m": jnp.zeros(4, jnp.float32)}
+    hosts = {}
+    for h in range(3):
+        hosts[h] = SyncCheckpointRestore(str(tmp_path / f"host{h}"),
+                                         keep_last=0, coordinator=coord,
+                                         host=h,
+                                         async_save=(h == 2))
+    committed = {0: (10, 20, 30), 1: (10, 20), 2: (10, 20, 30, 40)}
+    try:
+        for h, steps in committed.items():
+            for s in steps:
+                hosts[h].checkpoint(
+                    s, {"w": params["w"] + s}, {"m": opt["m"] + s})
+        for h in range(3):
+            hosts[h].wait()
+            hosts[h]._report_commit()   # async: refresh post-commit floor
+        assert coord.rewind_step() == 20
+        for h in range(3):
+            p, o, step = hosts[h].recover(params, opt)
+            assert step == 20
+            np.testing.assert_array_equal(np.asarray(p["w"]),
+                                          np.asarray(params["w"]) + 20)
+            np.testing.assert_array_equal(np.asarray(o["m"]), 20.0)
+    finally:
+        for h in hosts.values():
+            h.close()
+
+    # a dead host's report drops out of the floor
+    coord2 = Coordinator(SimTransport(FailureTrace.single_failure(1, 1)), 3)
+    for h, s in ((0, 30), (1, 10), (2, 20)):
+        coord2.report_commit(h, s)
+    assert coord2.rewind_step() == 10
+    coord2.advance(0)
+    coord2.advance(1)            # host 1 dies; its lagging floor goes too
+    assert coord2.rewind_step() == 20
+
+
+def test_single_host_rewind_matches_local_behavior(tmp_path):
+    """With one reporting host the coordinator floor degenerates to the
+    host's own last committed step — the pre-refactor rewind target."""
+    coord = Coordinator(SimTransport(), 1)
+    pol = SyncCheckpointRestore(str(tmp_path), keep_last=0,
+                                coordinator=coord)
+    try:
+        for s in (5, 10):
+            pol.checkpoint(s, {"w": jnp.ones(2) * s}, {"m": jnp.zeros(2)})
+        p, _, step = pol.recover({"w": jnp.ones(2)}, {"m": jnp.zeros(2)})
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(p["w"]), 10.0)
+    finally:
+        pol.close()
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+def test_proc_place_rows_preserves_values_on_host_devices():
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    with Coordinator(ProcTransport(), 3) as c:
+        devmap = c.transport.host_devices()
+        assert set(devmap) == {0, 1, 2}
+        placed = c.place_rows(tree, [0, 1, 2])
+        np.testing.assert_array_equal(np.asarray(placed["w"]),
+                                      np.asarray(tree["w"]))
+    # sim transport: identity (no host map)
+    with Coordinator(SimTransport(), 2) as c:
+        t2 = {"w": jnp.ones((2, 3))}
+        assert c.place_rows(t2, [0, 1]) is t2
+
+
+def test_place_rows_multi_device_survivors_stay_put():
+    """A single stacked array has one placement: when survivors map to
+    SEVERAL devices, place_rows must leave the tree alone (stacking
+    rows committed to different devices raises in jax) — per-host
+    placement belongs to the future distributed data plane."""
+    class TwoDeviceTransport(SimTransport):
+        def host_devices(self):
+            return {0: "devA", 1: "devB"}   # distinct placements
+
+    tree = {"w": jnp.ones((2, 3))}
+    c = Coordinator(TwoDeviceTransport(), 2)
+    assert c.place_rows(tree, [0, 1]) is tree
+
+    class OneDeviceTransport(SimTransport):
+        def host_devices(self):
+            import jax
+            return {0: jax.devices()[0], 1: jax.devices()[0]}
+
+    c = Coordinator(OneDeviceTransport(), 2)
+    placed = c.place_rows(tree, [0, 1])
+    np.testing.assert_array_equal(np.asarray(placed["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_proc_injected_event_races_organic_crash():
+    """An injected command aimed at a worker that crashed since the last
+    poll must observe the death (a corpse can't ack) instead of blocking
+    out the ack timeout and killing the run."""
+    trace = FailureTrace([TraceEvent(1, "slow", 1, 0.5)])
+    proc = ProcTransport(inject=trace, ack_timeout=10.0)
+    with Coordinator(proc, 2, heartbeat_timeout=3) as c:
+        c.advance(0)
+        proc.kill_worker(1)          # dies between polls
+        t0 = time.time()
+        c.advance(1)                 # injection step: must not time out
+        assert time.time() - t0 < 5.0
+        log = c.transition_log()
+    assert (1, "death", 1, "fail", 1.0) in log
+    assert not any(k == "rate" for _, k, _, _, _ in log)
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_subscribe_rejects_unknown_kind():
+    with Coordinator(SimTransport(), 1) as c:
+        with pytest.raises(ValueError, match="unknown transition kind"):
+            c.subscribe("resurrect", lambda t: None)
+
+
+def test_proc_spawn_worker_rejects_reused_id():
+    proc = ProcTransport()
+    with Coordinator(proc, 2):
+        with pytest.raises(ValueError, match="never reused"):
+            proc.spawn_worker(1)

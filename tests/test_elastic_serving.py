@@ -211,6 +211,11 @@ def test_fleet_hang_escalates_to_timeout_drain(params):
 
 
 def test_fleet_hang_recover_before_timeout_is_free(params):
+    """A one-tick stall that recovers before the timeout.  With
+    preemptive drain (the default) the false positive costs the drained
+    continuations' re-prefill — bounded, and outputs stay bit-identical;
+    with preemptive_drain=False the stall is nearly free (the work waits
+    the tick out on the suspect), the pre-PR behavior."""
     cfg = _cfg()
     free_fleet, free = _run_fleet(params, cfg, _stream(10, cfg))
     trace = FailureTrace([TraceEvent(3, "hang", 2),
@@ -218,11 +223,25 @@ def test_fleet_hang_recover_before_timeout_is_free(params):
     fleet, fins = _run_fleet(params, cfg, _stream(10, cfg), trace=trace)
     st = fleet.stats()
     assert st["drains"] == 0 and st["finished"] == 10
+    assert st["preemptive_drains"] == 1       # the suspect was drained
     assert len(fleet.replicas) == 3
     for a, b in zip(free, fins):
         assert a.tokens == b.tokens
-    # a one-tick stall costs at most a tick or two of wall time
-    assert st["wall"] <= free_fleet.stats()["wall"] + 3
+    # false-positive cost: a couple of ticks per re-prefilled
+    # continuation, never the heartbeat timeout
+    free_wall = free_fleet.stats()["wall"]
+    assert st["wall"] <= free_wall + 2 + 2 * st["readmitted"]
+
+    fleet_np = ServeFleet(params, cfg, replicas=3, num_slots=2,
+                          cache_len=24, trace=trace,
+                          preemptive_drain=False)
+    fins_np = fleet_np.run(_stream(10, cfg))
+    st_np = fleet_np.stats()
+    assert st_np["preemptive_drains"] == 0
+    for a, b in zip(free, fins_np):
+        assert a.tokens == b.tokens
+    # without preemption a one-tick stall costs at most a tick or two
+    assert st_np["wall"] <= free_wall + 3
 
 
 def test_fleet_join_absorbs_backlog(params):
@@ -290,6 +309,44 @@ def test_drained_continuations_skip_suspect_replica(params):
         assert a.rid == b.rid and a.tokens == b.tokens
     # dead replicas then also never reappear in routing
     assert set(fleet.replicas) == {1}
+
+
+def test_preemptive_drain_on_suspect(params):
+    """ROADMAP "preemptive drain" gap, closed by the cluster control
+    plane: the moment the coordinator marks a replica SUSPECT, its
+    in-flight requests drain into prefix continuations and requeue —
+    they do NOT wait out the heartbeat timeout on the dying replica.
+    Replica 2 hangs at wall 3 (SUSPECT that step, DEAD at 5): the drain
+    must happen inside the suspect window, the timeout death must find
+    an already-empty engine, and stitched outputs must still match the
+    failure-free run bit-exactly."""
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(3, "hang", 2)])
+    fleet = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                       trace=trace)
+    for q in _stream(10, cfg):
+        fleet.submit(q)
+    drained_while_suspect = None   # readmitted count inside the window
+    while not fleet.done:
+        fleet.step()
+        ws = fleet.membership.workers[2]
+        if ws.status == "suspect" and drained_while_suspect is None:
+            drained_while_suspect = fleet.policy.readmitted
+            assert fleet.preemptive_drains == 1
+            # the suspect's engine is already empty: nothing is waiting
+            # out the timeout on it
+            assert fleet.replicas[2].load == 0
+    assert drained_while_suspect is not None and drained_while_suspect >= 1
+    st = fleet.stats()
+    # the timeout death still counts a drain, but it finds an empty
+    # engine: no additional continuations were stranded until then
+    assert st["drains"] == 1
+    assert st["readmitted"] == drained_while_suspect
+    assert st["finished"] == 10
+    fins = sorted(fleet.finished, key=lambda f: f.rid)
+    for a, b in zip(free, fins):
+        assert a.rid == b.rid and a.tokens == b.tokens
 
 
 def test_fleet_all_replicas_dead_raises(params):
