@@ -1,8 +1,10 @@
 """Elastic training under failure traces vs the failure-free baseline.
 
-For each recovery mode (sync all-reduce w/ checkpoint restore, local-SGD
-bounded-staleness continuation, EASGD center survival) this runs the
-deterministic elastic driver three ways on the same problem:
+For each training mode (sync all-reduce w/ checkpoint restore, local-SGD
+bounded-staleness continuation, EASGD center survival, and the
+parameter-server family: fully async push/pull and stale-synchronous)
+this runs the deterministic elastic driver three ways on the same
+problem:
 
   free   : no trace — the goodput / loss baseline
   fail1  : single worker death mid-run (the acceptance scenario: goodput
@@ -11,9 +13,15 @@ deterministic elastic driver three ways on the same problem:
 
 Wall-clock is simulated (straggler-bound step times), so every number is
 a deterministic function of the trace.  Results go to
-benchmarks/results/elastic.json for the roofline/report tooling.
+benchmarks/results/elastic.json for the roofline/report tooling,
+including a PS-vs-all-reduce contrast table: the survey's core elasticity
+claim is that a barrier couples every worker to the slowest/least
+reliable one, while PS push/pull only loses the affected worker's
+throughput — `contrast.ps_vs_allreduce` quantifies exactly that on the
+churn trace.
 
   PYTHONPATH=src python benchmarks/bench_elastic.py [--quick]
+      [--modes sync,local_sgd,easgd,async_ps,ssp]
 """
 from __future__ import annotations
 
@@ -24,6 +32,7 @@ import tempfile
 
 from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
                            run_elastic)
+from repro.elastic.modes import MODES
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
@@ -38,11 +47,13 @@ def churn_trace(steps: int, workers: int) -> FailureTrace:
     ])
 
 
-def run_mode(mode: str, trace, *, workers, steps, batch, ckpt_every):
+def run_mode(mode: str, trace, *, workers, steps, batch, ckpt_every,
+             staleness):
     with tempfile.TemporaryDirectory() as d:
         return run_elastic(ElasticProblem(), mode=mode, workers=workers,
                            steps=steps, global_batch=batch, trace=trace,
-                           ckpt_dir=d, ckpt_every=ckpt_every)
+                           ckpt_dir=d, ckpt_every=ckpt_every,
+                           staleness=staleness)
 
 
 def main(argv=None) -> dict:
@@ -54,20 +65,30 @@ def main(argv=None) -> dict:
     # forces one survivor to 10 rows and the barrier waits on it)
     ap.add_argument("--batch", type=int, default=56)
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--modes", default=",".join(MODES),
+                    help="comma-separated subset of "
+                         f"{','.join(MODES)} (default: all)")
+    ap.add_argument("--staleness", type=int, default=2,
+                    help="SSP staleness bound s")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer steps, tighter ckpt cadence")
     args = ap.parse_args(argv)
     if args.quick:
         args.steps, args.ckpt_every = 40, 5
+    modes = [m.strip() for m in args.modes.split(",") if m.strip()]
+    bad = [m for m in modes if m not in MODES]
+    if bad:
+        ap.error(f"unknown mode(s) {bad}; choose from {MODES}")
 
     fail_step = args.steps // 2 - 3
     report = {"workers": args.workers, "steps": args.steps,
-              "global_batch": args.batch, "modes": {}}
+              "global_batch": args.batch, "staleness": args.staleness,
+              "modes": {}}
     print("mode,scenario,goodput,goodput_ratio,recovery_latency,"
           "lost_steps,final_loss,final_workers")
-    for mode in ("sync", "local_sgd", "easgd"):
+    for mode in modes:
         kw = dict(workers=args.workers, steps=args.steps, batch=args.batch,
-                  ckpt_every=args.ckpt_every)
+                  ckpt_every=args.ckpt_every, staleness=args.staleness)
         free = run_mode(mode, None, **kw)
         fail1 = run_mode(mode, FailureTrace.single_failure(fail_step, 1),
                          **kw)
@@ -86,6 +107,11 @@ def main(argv=None) -> dict:
                 "recoveries": len(res.recoveries),
                 "splits_replanned": res.splits_replanned,
             }
+            if res.mode_stats:   # PS family observability
+                rows[name]["blocked_rounds"] = \
+                    res.mode_stats["blocked_rounds"]
+                rows[name]["max_clock_gap"] = \
+                    res.mode_stats["max_clock_gap"]
             print(f"{mode},{name},{res.goodput:.3f},{ratio:.3f},"
                   f"{lat:.2f},{lost},{res.final_loss:.6f},"
                   f"{len(res.final_alive)}")
@@ -97,6 +123,35 @@ def main(argv=None) -> dict:
         assert rows["fail1"]["final_loss"] <= \
             max(10 * rows["free"]["final_loss"], 5e-3), (
             f"{mode}: failure run did not converge")
+
+    # PS vs all-reduce under churn: the barrier pays for every membership
+    # event + the straggler; async PS only loses the affected workers
+    if "sync" in report["modes"]:
+        contrast = {}
+        sync_rows = report["modes"]["sync"]
+        for m in ("async_ps", "ssp"):
+            if m not in report["modes"]:
+                continue
+            rows = report["modes"][m]
+            contrast[m] = {
+                "churn_goodput_vs_sync":
+                    rows["churn"]["goodput"] / sync_rows["churn"]["goodput"],
+                "churn_ratio_vs_sync":
+                    rows["churn"]["goodput_ratio"]
+                    / sync_rows["churn"]["goodput_ratio"],
+                "fail1_ratio_vs_sync":
+                    rows["fail1"]["goodput_ratio"]
+                    / sync_rows["fail1"]["goodput_ratio"],
+            }
+            print(f"contrast,{m},churn_goodput_vs_sync,"
+                  f"{contrast[m]['churn_goodput_vs_sync']:.3f}")
+        if contrast:
+            report["contrast"] = {"ps_vs_allreduce": contrast}
+        if "async_ps" in contrast:
+            # the headline claim must hold: async PS rides out churn at
+            # least as well as the all-reduce barrier does
+            assert contrast["async_ps"]["churn_ratio_vs_sync"] >= 1.0, (
+                "async_ps lost MORE goodput to churn than sync all-reduce")
 
     RESULTS.mkdir(exist_ok=True)
     out = RESULTS / "elastic.json"

@@ -40,6 +40,13 @@ GATES = {
         ("modes.local_sgd.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
         ("modes.easgd.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
         ("modes.sync.free.goodput", DEFAULT_MIN_RATIO),
+        # the parameter-server family: async must keep its no-barrier
+        # goodput under failure/churn, and its churn advantage over the
+        # all-reduce barrier (the survey's elasticity claim) must hold
+        ("modes.async_ps.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("modes.ssp.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("contrast.ps_vs_allreduce.async_ps.churn_ratio_vs_sync",
+         DEFAULT_MIN_RATIO),
     ],
     "serving": [
         ("continuous.tput", DEFAULT_MIN_RATIO),

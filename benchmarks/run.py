@@ -12,7 +12,9 @@ Sections:
   kernels    : Pallas kernels vs oracles + VMEM working sets
   moe_routing: global vs group-wise MoE routing costs (§Perf iteration 1)
   serving    : continuous vs static batching on a mixed-length stream
-  elastic    : recovery latency + goodput under failure traces
+  elastic    : recovery latency + goodput under failure traces, all five
+               training modes (sync/local_sgd/easgd/async_ps/ssp) + the
+               PS-vs-all-reduce churn contrast
   elastic_serving : multi-replica fleet drain/re-admit under failure traces
   checkpoint : blocking vs async checkpoint saves at the elastic cadence
   multihost  : ProcTransport vs SimTransport — equivalence + control-

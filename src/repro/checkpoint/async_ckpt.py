@@ -87,13 +87,19 @@ class AsyncCheckpointError(RuntimeError):
 class AsyncCheckpointer:
     def __init__(self, ckpt_dir: str, *, keep_last: int = 0,
                  fsync: bool = True,
-                 failpoint: Optional[Callable[[str], None]] = None):
+                 failpoint: Optional[Callable[[str], None]] = None,
+                 floor_fn: Optional[Callable[[], Optional[int]]] = None):
+        """floor_fn: called (on the CALLER's thread, at `save` time — so
+        GC outcomes don't depend on writer-thread timing) for the fleet
+        rewind floor; retention then exempts the newest checkpoint at or
+        below it (`ckpt.gc_checkpoints`)."""
         self.ckpt_dir = str(ckpt_dir)
         self.keep_last = keep_last
         self.fsync = fsync
         self._failpoint = failpoint
+        self._floor_fn = floor_fn
         self._cv = threading.Condition()
-        self._job: Optional[tuple] = None     # (step, flat_host, manifest)
+        self._job: Optional[tuple] = None  # (step, flat_host, manifest, floor)
         self._errors: list = []
         self._closed = False
         # a restarted process resumes from whatever the dead one committed
@@ -118,10 +124,11 @@ class AsyncCheckpointer:
         # double buffer: stage to host while the writer drains the
         # previous job, then block only on a still-busy writer
         flat_host, manifest = host_snapshot(step, tree, metadata)
+        floor = self._floor_fn() if self._floor_fn is not None else None
         with self._cv:
             while self._job is not None:
                 self._cv.wait()
-            self._job = (step, flat_host, manifest)
+            self._job = (step, flat_host, manifest, floor)
             self._cv.notify_all()
             self._raise_deferred_locked()
         return str(pathlib.Path(self.ckpt_dir) / f"step_{step:08d}")
@@ -191,7 +198,7 @@ class AsyncCheckpointer:
             self._failpoint(name)
 
     def _write(self, step: int, flat_host: Dict[str, np.ndarray],
-               manifest: Dict) -> None:
+               manifest: Dict, floor: Optional[int] = None) -> None:
         tmp, final = stage_dirs(self.ckpt_dir, step)
         self._fail("before_write")
         write_staged(tmp, flat_host, manifest, fsync=False)
@@ -205,4 +212,5 @@ class AsyncCheckpointer:
         self._fail("after_commit_before_gc")
         if self.keep_last:
             gc_checkpoints(self.ckpt_dir, self.keep_last,
-                           on_remove=lambda _p: self._fail("mid_gc"))
+                           on_remove=lambda _p: self._fail("mid_gc"),
+                           floor=floor)

@@ -92,19 +92,34 @@ def sweep_tmp(ckpt_dir: str) -> list:
 
 
 def gc_checkpoints(ckpt_dir: str, keep_last: int,
-                   on_remove: Optional[Callable[[str], None]] = None) -> list:
+                   on_remove: Optional[Callable[[str], None]] = None,
+                   floor: Optional[int] = None) -> list:
     """Delete all but the newest `keep_last` complete checkpoints.
 
     `on_remove(path)` fires after each directory is deleted — the async
-    writer's mid-GC failure-injection point rides on it."""
+    writer's mid-GC failure-injection point rides on it.
+
+    `floor` is the fleet rewind floor (`Coordinator.rewind_step`): the
+    newest checkpoint at or below it is the step a multi-host recovery
+    would restore, so it is exempt from retention — a fast host's
+    keep_last must never collect the checkpoint a straggling host still
+    needs the fleet to rewind to.  Exempting only the newest step <=
+    floor (not everything above it) keeps retention bounded: at most
+    keep_last + 1 dirs survive."""
     base = pathlib.Path(ckpt_dir)
     if keep_last <= 0 or not base.exists():
         return []
     steps = sorted(
         (int(p.name.split("_")[1]), p) for p in base.glob("step_*")
         if (p / "manifest.json").exists())
+    protected = None
+    if floor is not None:
+        eligible = [s for s, _ in steps if s <= floor]
+        protected = max(eligible) if eligible else None
     removed = []
-    for _, p in steps[:-keep_last]:
+    for s, p in steps[:-keep_last]:
+        if protected is not None and s == protected:
+            continue
         shutil.rmtree(p)
         removed.append(str(p))
         if on_remove is not None:
@@ -213,10 +228,13 @@ def commit_staged(tmp: pathlib.Path, final: pathlib.Path,
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
                     metadata: Optional[Dict] = None,
-                    keep_last: int = 0) -> str:
+                    keep_last: int = 0,
+                    floor: Optional[int] = None) -> str:
     """keep_last > 0 enables retention: after a successful save, only the
-    newest `keep_last` checkpoints survive.  Every save also sweeps
-    orphaned tmp dirs from killed runs (any step, not just this one)."""
+    newest `keep_last` checkpoints survive (plus the newest step at or
+    below `floor`, the fleet rewind floor — see `gc_checkpoints`).
+    Every save also sweeps orphaned tmp dirs from killed runs (any
+    step, not just this one)."""
     tmp, final = stage_dirs(ckpt_dir, step)
     manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
     for key, arr, true_dtype in iter_snapshot(tree):  # stream, leaf by leaf
@@ -226,7 +244,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     commit_staged(tmp, final)
     if keep_last:
-        gc_checkpoints(ckpt_dir, keep_last)
+        gc_checkpoints(ckpt_dir, keep_last, floor=floor)
     return str(final)
 
 

@@ -156,16 +156,35 @@ class Coordinator:
             return
         self._commits[host] = int(step)
 
-    def rewind_step(self) -> Optional[int]:
+    def rewind_step(self, *, exclude: Optional[int] = None) -> Optional[int]:
         """The fleet-wide safe recovery step: the minimum committed step
         over surviving reporting hosts (None until any host reports).
         Restoring newer than this would leave some host without its
         shard of the checkpoint; a death drops the host's report (its
-        shards are rebuilt from the survivors' floor)."""
-        return min(self._commits.values()) if self._commits else None
+        shards are rebuilt from the survivors' floor).
+
+        exclude: compute the floor over the OTHER hosts — what a saver
+        asks before GC'ing its own checkpoints ("what might the rest of
+        the fleet still rewind me to?").  Excluding self keeps the
+        single-reporting-host case floor-free (None), so per-host
+        retention only changes when another host is actually behind."""
+        vals = [s for h, s in self._commits.items() if h != exclude]
+        return min(vals) if vals else None
 
     def committed_steps(self) -> Dict[int, int]:
         return dict(self._commits)
+
+    # -- bounded-staleness clocks --------------------------------------
+    def clock_gate(self, staleness: Optional[int]):
+        """An `SSPClockGate` wired to this coordinator's membership: a
+        death transition drops the worker's clock, so a dead straggler
+        releases blocked fast workers instead of freezing the fleet at
+        its last clock.  staleness=None never blocks (fully async) but
+        still tracks clocks for staleness accounting."""
+        from repro.core.param_server import SSPClockGate
+        gate = SSPClockGate(staleness)
+        self.subscribe("death", lambda t: gate.drop(t.worker))
+        return gate
 
     # -- placement -----------------------------------------------------
     def place_rows(self, tree_w: Pytree,

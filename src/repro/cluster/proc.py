@@ -70,9 +70,22 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
       {"v": "slow", "rate": r}    self-report relative throughput r
       {"v": "commit", "step": s}  step this host last committed a
                                   checkpoint at (piggybacks on beats)
+      {"v": "ps_open", "lr": ..., "momentum": ..., "entries": ...}
+                              activate the ParamServer role: this member
+                              now also serves a versioned KV shard
+                              (`core.param_server.PSShard`; numpy is
+                              imported lazily here, never at module
+                              scope, so plain workers stay stdlib-only)
+      {"v": "ps_push", "worker": w, "clock": c, "grads": ...}
+                              apply a gradient push; ack carries the
+                              new shard version
+      {"v": "ps_pull"}        ack carries (version, entries)
       {"v": "stop"}           clean shutdown
     Every command except die/stop is acknowledged on stdout so an
-    injecting transport can emit the event at a deterministic wall step.
+    injecting transport can emit the event at a deterministic wall step
+    (ps_* acks double as RPC replies).  Array payloads ride as base64
+    float32 (`param_server.encode_entries`) — an exact round-trip, so
+    proc-transport PS training is bit-identical to sim.
     All pre-hang beats precede the hang ack in pipe order (single
     writer), so after the ack the worker is provably silent."""
     import argparse
@@ -85,6 +98,7 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
 
     out = sys.stdout
     rate, committed, hung, seq = 1.0, None, False, 0
+    ps = None                       # PSShard once ps_open arrives
     buf = b""
 
     def emit(obj) -> None:
@@ -104,6 +118,7 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                     continue
                 cmd = json.loads(line)
                 verb = cmd["v"]
+                reply: Dict[str, Any] = {}
                 if verb == "die":
                     os._exit(1)             # no ack, no cleanup: a crash
                 elif verb == "stop":
@@ -116,7 +131,22 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                     rate = float(cmd["rate"])
                 elif verb == "commit":
                     committed = int(cmd["step"])
-                emit({"t": "ack", "verb": verb})
+                elif verb == "ps_open":
+                    from repro.core.param_server import (PSShard,
+                                                         decode_entries)
+                    ps = PSShard(cmd["lr"],
+                                 momentum=cmd.get("momentum", 0.0))
+                    ps.init(decode_entries(cmd["entries"]))
+                elif verb == "ps_push":
+                    from repro.core.param_server import decode_entries
+                    reply["version"] = ps.push(cmd["worker"], cmd["clock"],
+                                               decode_entries(cmd["grads"]))
+                elif verb == "ps_pull":
+                    from repro.core.param_server import encode_entries
+                    version, entries = ps.pull()
+                    reply["version"] = version
+                    reply["entries"] = encode_entries(entries)
+                emit({"t": "ack", "verb": verb, **reply})
         if not hung:
             seq += 1
             emit({"t": "beat", "seq": seq, "rate": rate,
@@ -291,6 +321,11 @@ class ProcTransport(Transport):
         """True once the worker acks `verb`; False if its pipe hit EOF
         first (the worker died mid-command — a corpse never acks, so
         waiting out the timeout would stall the whole run)."""
+        return self._await_reply(wid, verb) is not None
+
+    def _await_reply(self, wid: int, verb: str) -> Optional[Dict]:
+        """The ack payload for `verb` (RPC reply), or None if the
+        worker's pipe hit EOF first (it died mid-command)."""
         deadline = time.monotonic() + self.ack_timeout
         while True:
             w, payload = self._next_msg(deadline,
@@ -299,9 +334,9 @@ class ProcTransport(Transport):
                 continue
             t = payload.get("t")
             if t == "ack" and payload.get("verb") == verb:
-                return True
+                return payload
             if t == "eof":
-                return False
+                return None
 
     def _await_beat(self, h: _Handle) -> None:
         """Block until the worker's first beat (already-noted beats from
@@ -444,6 +479,36 @@ class ProcTransport(Transport):
         h = self._workers[wid]
         self._send(h, {"v": "commit", "step": step})
         self._await_ack(wid, "commit")
+
+    # -- ParamServer role ---------------------------------------------
+    def _ps_rpc(self, ps_id: int, msg: Dict) -> Dict:
+        """Command round-trip to a PS member.  A PS that dies mid-RPC is
+        fatal for the requester: unlike a worker death (lost throughput),
+        a centralized shard holds the only copy of its parameters."""
+        h = self._workers[ps_id]
+        self._send(h, msg)
+        reply = self._await_reply(ps_id, msg["v"])
+        if reply is None:
+            raise RuntimeError(
+                f"parameter server {ps_id} died during {msg['v']}")
+        return reply
+
+    def ps_open(self, ps_id: int, lr: float, entries, momentum=0.0) -> None:
+        from repro.core.param_server import encode_entries
+        self._ps_rpc(ps_id, {"v": "ps_open", "lr": lr, "momentum": momentum,
+                             "entries": encode_entries(entries)})
+
+    def ps_push(self, ps_id: int, worker: int, clock: int, grads) -> int:
+        from repro.core.param_server import encode_entries
+        reply = self._ps_rpc(ps_id, {"v": "ps_push", "worker": worker,
+                                     "clock": clock,
+                                     "grads": encode_entries(grads)})
+        return reply["version"]
+
+    def ps_pull(self, ps_id: int):
+        from repro.core.param_server import decode_entries
+        reply = self._ps_rpc(ps_id, {"v": "ps_pull"})
+        return reply["version"], decode_entries(reply["entries"])
 
     def host_devices(self) -> Dict[int, Any]:
         import jax  # coordinator-side only; workers never reach here

@@ -24,6 +24,9 @@ class SimTransport(Transport):
         # checkpoint rewind path is transport-agnostic): queued here by
         # `report_commit`, drained by the coordinator each poll
         self._commits: List = []
+        # ParamServer role: in-process shards, same PSShard math the
+        # proc transport's PS child runs behind a pipe
+        self._ps: Dict[int, Any] = {}
 
     def poll(self, step: int) -> List[TraceEvent]:
         return list(self.trace.at(step))
@@ -39,6 +42,19 @@ class SimTransport(Transport):
 
     def host_devices(self) -> Dict[int, Any]:
         return {}
+
+    # -- ParamServer role ---------------------------------------------
+    def ps_open(self, ps_id: int, lr: float, entries, momentum=0.0) -> None:
+        from repro.core.param_server import PSShard
+        shard = PSShard(lr, momentum=momentum)
+        shard.init(entries)
+        self._ps[ps_id] = shard
+
+    def ps_push(self, ps_id: int, worker: int, clock: int, grads) -> int:
+        return self._ps[ps_id].push(worker, clock, grads)
+
+    def ps_pull(self, ps_id: int):
+        return self._ps[ps_id].pull()
 
     def captured_trace(self) -> FailureTrace:
         """A simulated run observes exactly its input trace."""

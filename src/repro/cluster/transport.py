@@ -67,6 +67,31 @@ class Transport(abc.ABC):
         `FailureTrace` (the trace-capture path: live incident ->
         deterministic SimTransport test case)."""
 
+    # -- ParamServer role ---------------------------------------------
+    # A parameter server is just a member host (the coordinator tracks
+    # its liveness like any worker) that additionally serves a versioned
+    # key-value shard (`core.param_server.PSShard`).  Entries/grads are
+    # plain {key: float32 ndarray} dicts; transports that support the
+    # role must make push/pull byte-exact across the wire so sim and
+    # proc training stay bit-identical.
+    def ps_open(self, ps_id: int, lr: float, entries: Dict[str, Any],
+                momentum: float = 0.0) -> None:
+        """Activate the ParamServer role on member `ps_id`, seeding its
+        shard with `entries` and the server-side SGD step size."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no ParamServer role")
+
+    def ps_push(self, ps_id: int, worker: int, clock: int,
+                grads: Dict[str, Any]) -> int:
+        """Apply a worker's gradient push; returns the shard version."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no ParamServer role")
+
+    def ps_pull(self, ps_id: int) -> Tuple[int, Dict[str, Any]]:
+        """Fetch (version, entries) from the shard."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no ParamServer role")
+
     def close(self) -> None:
         """Tear down workers/queues (idempotent)."""
 

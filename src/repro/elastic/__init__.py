@@ -6,6 +6,27 @@ membership state machine, a resharding engine remaps worker-stacked state
 W -> W', and per-mode recovery policies keep training converging through
 worker death, scale-up, and slowdown.  See `repro.elastic.driver` for the
 two run loops (simulation + real LM training).
+
+Architecture — the TrainingMode strategy layer (`repro.elastic.modes`):
+`run_elastic` is a mode-agnostic event loop (advance the coordinator,
+hand membership changes to the mode, run one round, account time); each
+training mode is a `TrainingMode` strategy owning its round step,
+recovery policy, checkpoint surface, straggler response, and goodput
+accounting:
+
+  sync      all-reduce barrier; `SyncCheckpointRestore` rewind recovery
+  local_sgd K local steps + average; `BoundedStalenessContinuation`
+  easgd     elastic force around a surviving center; `EASGDCenterSurvival`
+  async_ps  push-grads/pull-params against ParamServer hosts on the
+            cluster transport — no barrier, death costs only throughput
+  ssp       async_ps under a bounded staleness window enforced by the
+            coordinator's death-aware clock gate (`Coordinator.clock_gate`)
+
+The PS modes add `num_ps` extra membership hosts (ids workers..): the
+coordinator tracks ParamServer liveness exactly like any other host, and
+both transports (SimTransport, ProcTransport) serve the versioned-KV PS
+role with a bit-exact float32 wire codec, so sim and real-process runs
+produce identical trajectories (tests/test_cluster.py pins this).
 """
 from repro.elastic.membership import (FailureTrace, Membership, TraceEvent,
                                       Transition)
@@ -18,6 +39,7 @@ from repro.elastic.recovery import (BoundedStalenessContinuation,
                                     SyncCheckpointRestore)
 from repro.elastic.straggler import (ThroughputMonitor, replan_on_straggle,
                                      step_time)
+from repro.elastic.modes import MODES, TrainingMode, make_mode
 from repro.elastic.driver import (ElasticProblem, ElasticRunResult,
                                   RecoveryRecord, elastic_lm_loop,
                                   run_elastic)
@@ -29,6 +51,7 @@ __all__ = [
     "BoundedStalenessContinuation", "EASGDCenterSurvival",
     "ServingDrainReadmit", "SyncCheckpointRestore",
     "ThroughputMonitor", "replan_on_straggle", "step_time",
+    "MODES", "TrainingMode", "make_mode",
     "ElasticProblem", "ElasticRunResult", "RecoveryRecord",
     "elastic_lm_loop", "run_elastic",
 ]

@@ -39,18 +39,18 @@ import numpy as np
 # cluster.coordinator imports this package's membership/straggler
 # submodules, so a top-level import here would cycle when repro.cluster
 # is the entry point.
-from repro.core import data_parallel as DP
+from repro.core import data_parallel as DP  # noqa: F401  (re-export; the
+# mode strategies in elastic.modes own the per-round compute now)
 from repro.elastic.membership import FailureTrace, Transition
-from repro.elastic.recovery import (BoundedStalenessContinuation,
-                                    EASGDCenterSurvival,
-                                    SyncCheckpointRestore)
-from repro.elastic.reshard import save_stacked
-from repro.elastic.straggler import step_time
+from repro.elastic.recovery import SyncCheckpointRestore
+from repro.elastic.straggler import step_time  # noqa: F401  (re-export)
 from repro.optim.optimizers import sgd_momentum
 
 Pytree = Any
 
-MODES = ("sync", "local_sgd", "easgd")
+# the mode registry lives with the strategies; re-exported here because
+# this is where consumers historically imported it from
+from repro.elastic.modes import MODES, ModeContext  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +145,9 @@ class ElasticRunResult:
     # local modes: the final (W', ...)-stacked per-worker params, so the
     # cross-transport suite can compare survivor rows bit-exactly
     stacked_params: Any = None
+    # mode-specific observability (PS modes: server params/versions,
+    # worker clocks, pushes, blocked rounds, max observed clock gap)
+    mode_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def goodput(self) -> float:
@@ -163,8 +166,17 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 straggle_threshold: float = 0.5,
                 easgd_rho: float = 0.5,
                 async_ckpt: bool = False,
-                transport=None) -> ElasticRunResult:
+                transport=None,
+                staleness: int = 2,
+                num_ps: int = 1) -> ElasticRunResult:
     """Run `steps` elastic training rounds under a failure trace.
+
+    The loop itself is mode-agnostic: each wall step advances the
+    coordinator, hands any membership change to the active
+    `elastic.modes.TrainingMode`, then runs the mode's round.  The mode
+    owns round compute, recovery, checkpointing, straggler response and
+    goodput accounting; this function owns wall time, transitions,
+    recovery-latency close-out, and lifecycle.
 
     restore_penalty: simulated restore cost, in units of one nominal
     (failure-free, uniform-split) step time.
@@ -181,14 +193,20 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
     bit-identical because the membership transition log is
     (tests/test_cluster.py pins the equivalence).  The transport is
     closed before returning.
+
+    staleness / num_ps: the PS family's knobs — SSP's bounded staleness
+    window and the number of ParamServer shard hosts (which join the
+    membership at ids workers..workers+num_ps-1 above the workers).
     """
     from repro.cluster.coordinator import Coordinator
     from repro.cluster.sim import SimTransport
+    from repro.elastic.modes import make_mode
 
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
-    if mode == "sync" and ckpt_dir is None:
-        raise ValueError("sync mode needs ckpt_dir for recovery")
+    tm = make_mode(mode, staleness=staleness, num_ps=num_ps)
+    if tm.needs_ckpt_dir and ckpt_dir is None:
+        raise ValueError(f"{mode} mode needs ckpt_dir for recovery")
     if transport is not None and trace is not None:
         # a transport brings its own event source; silently ignoring the
         # trace would run failure-free and look like valid results
@@ -197,67 +215,37 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                          "ProcTransport(inject=trace))")
 
     coord = Coordinator(transport or SimTransport(trace or FailureTrace()),
-                        workers, heartbeat_timeout=heartbeat_timeout)
+                        workers + tm.extra_hosts,
+                        heartbeat_timeout=heartbeat_timeout)
     opt = sgd_momentum(lambda s: lr, momentum=0.0)
-    loss_fn = problem.loss_fn
-    nominal_t = global_batch / workers  # one uniform worker's step work
+    ctx = ModeContext(
+        problem=problem, coord=coord, opt=opt, workers=workers,
+        steps=steps, global_batch=global_batch, lr=lr, K=K,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, keep_last=keep_last,
+        restore_penalty=restore_penalty,
+        straggle_threshold=straggle_threshold, easgd_rho=easgd_rho,
+        async_ckpt=async_ckpt, staleness=staleness, num_ps=num_ps,
+        nominal_t=global_batch / workers)
 
     # ---- per-mode state -------------------------------------------------
     # setup failures here unwind before the main loop's finally is armed,
     # so close the coordinator (live ProcTransport workers) explicitly
     ids = list(coord.alive())
-    stacked_ckpt = None
-    policy = None
     try:
-        if mode == "sync":
-            params = problem.init_params()
-            opt_state = opt.init(params)
-            # host=-1: the driver's replicated-state saver is a logical
-            # host outside the worker id space, so a worker death never
-            # drops its commit floor from the coordinator aggregate
-            policy = SyncCheckpointRestore(ckpt_dir, keep_last=keep_last,
-                                           async_save=async_ckpt,
-                                           coordinator=coord, host=-1)
-            policy.checkpoint(0, params, opt_state)
-        else:
-            if async_ckpt and ckpt_dir:
-                from repro.checkpoint import AsyncCheckpointer
-                stacked_ckpt = AsyncCheckpointer(ckpt_dir,
-                                                 keep_last=keep_last)
-            p0 = problem.init_params()
-            params_w = jax.tree_util.tree_map(
-                lambda p: jnp.broadcast_to(p[None], (workers,) + p.shape),
-                p0)
-            if mode == "local_sgd":
-                opt_w = jax.vmap(opt.init)(params_w)
-                policy = BoundedStalenessContinuation()
-            else:
-                center = p0
-                policy = EASGDCenterSurvival()
-                easgd_cfg = DP.EASGDConfig(lr=lr, rho=easgd_rho)
+        tm.setup(ctx)
     except BaseException:
-        if stacked_ckpt is not None:
-            stacked_ckpt.close(wait=False)
-        if policy is not None and hasattr(policy, "close"):
-            policy.close()
+        tm.close()
         coord.close()
         raise
 
-    losses: Dict[int, float] = {}
-    recoveries: List[RecoveryRecord] = []
     all_transitions: List[Transition] = []
-    pending: List[Tuple[RecoveryRecord, int, float]] = []  # (rec, goal, t0)
-    sim_time = 0.0
-    samples_done = 0  # useful rows: redone (post-restore) work not re-counted
-    replans = 0
-    train_step = 0
     wall = 0
 
     try:
-        while train_step < steps:
+        while ctx.train_step < steps:
             # rate telemetry -> coordinator monitor, death -> forget: the
-            # control loop now lives in Coordinator.advance, shared with
-            # the serving fleet
+            # control loop lives in Coordinator.advance, shared with the
+            # serving fleet
             transitions = coord.advance(wall)
             all_transitions.extend(transitions)
             deaths = [t for t in transitions if t.kind == "death"]
@@ -268,178 +256,115 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 raise RuntimeError(f"wall step {wall}: all workers dead")
 
             if deaths or joins:
-                if mode == "sync":
-                    if deaths:  # the in-flight collective died: restore+rewind
-                        params, opt_state, restored = policy.recover(
-                            params, opt_state)
-                        lost = train_step - restored
-                        pause = restore_penalty * nominal_t
-                        sim_time += pause
-                        for d in deaths:
-                            rec = RecoveryRecord(wall, d.worker, d.cause, lost)
-                            recoveries.append(rec)
-                            pending.append((rec, train_step, sim_time - pause))
-                        train_step = restored
-                elif mode == "local_sgd":
-                    st = policy.apply({"params": params_w, "opt": opt_w},
-                                      ids, new_ids)
-                    # survivor rows land on their host's device on the
-                    # shrunken mesh (identity under simulated transports)
-                    params_w = coord.place_rows(st["params"], new_ids)
-                    opt_w = coord.place_rows(st["opt"], new_ids)
-                    for d in deaths:
-                        recoveries.append(
-                            RecoveryRecord(wall, d.worker, d.cause, 0))
-                else:  # easgd
-                    params_w, center = policy.apply(params_w, center,
-                                                    ids, new_ids)
-                    params_w = coord.place_rows(params_w, new_ids)
-                    for d in deaths:
-                        recoveries.append(
-                            RecoveryRecord(wall, d.worker, d.cause, 0))
+                tm.on_membership_change(ctx, deaths, joins, ids, new_ids)
             ids = new_ids
 
-            rates = coord.rates()
+            tm.run_round(ctx, ids, coord.rates())
 
-            # ---- one training round ----------------------------------------
-            if mode == "sync":
-                # straggler mitigation: DBS split on the sync barrier
-                split, slow = coord.plan_split(global_batch, alive=ids,
-                                               threshold=straggle_threshold)
-                if slow:
-                    replans += 1
-                batch = problem.stack(ids, train_step, split)
-                batches_w = {k: jnp.asarray(v) for k, v in batch.items()}
-                losses_w, grads_w = DP.per_worker_grads(
-                    loss_fn, params, batches_w)
-                wts = jnp.asarray([split[w] for w in ids], jnp.float32)
-                wts = wts / jnp.sum(wts)
-                g = jax.tree_util.tree_map(
-                    lambda gw: jnp.tensordot(wts, gw.astype(jnp.float32), 1),
-                    grads_w)
-                params, opt_state = opt.update(g, opt_state, params)
-                losses[train_step] = float(jnp.dot(wts, losses_w))
-                sim_time += step_time(split, rates)
-                if ckpt_every and (train_step + 1) % ckpt_every == 0:
-                    policy.checkpoint(train_step + 1, params, opt_state)
-            else:
-                # ragged local rounds: once the monitor flags a straggler
-                # the per-local-step rows go through the same DBS split as
-                # the sync barrier, so a slow worker sheds work in the
-                # local modes too.  The healthy path stays UNIFORM —
-                # equal-rate workers must not train on unequal data just
-                # because the budget doesn't divide evenly — and the DBS
-                # path plans over the SAME round total, so crossing the
-                # flag edge reallocates rows without changing the batch
-                # size.  Rounded (not floored) so a death doesn't step
-                # the allocation and conflate quantization with failure
-                # cost.
-                n = max(1, round(global_batch / (len(ids) * K)))
-                slow = coord.monitor.stragglers(ids, straggle_threshold)
-                if slow:
-                    replans += 1
-                    split, _ = coord.plan_split(n * len(ids), alive=ids,
-                                                threshold=straggle_threshold)
-                else:
-                    split = {w: n for w in ids}
-                samples_done += K * sum(split.values())
-                batch = problem.stack(ids, train_step, split, K=K)
-                batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
-                if mode == "local_sgd":
-                    params_w, opt_w, m = DP.local_sgd_round(
-                        loss_fn, params_w, opt, opt_w, batches_wk)
-                else:
-                    params_w, center, m = DP.easgd_round(
-                        loss_fn, params_w, center, batches_wk, easgd_cfg)
-                losses[train_step] = float(m["loss"])
-                sim_time += step_time({w: split[w] * K for w in ids}, rates)
-                if ckpt_dir and ckpt_every and (train_step + 1) % ckpt_every == 0:
-                    stacked = ({"params": params_w, "opt": opt_w}
-                               if mode == "local_sgd" else {"params": params_w})
-                    rep = None if mode == "local_sgd" else {"center": center}
-                    save_stacked(ckpt_dir, train_step + 1, stacked, ids,
-                                 replicated=rep, keep_last=keep_last,
-                                 checkpointer=stacked_ckpt)
-
-            train_step += 1
+            ctx.train_step += 1
             wall += 1
 
             # close out recovery latency once progress is regained
             still = []
-            for rec, goal, t0 in pending:
-                if train_step >= goal:
-                    rec.latency = sim_time - t0
+            for rec, goal, t0 in ctx.pending:
+                if ctx.train_step >= goal:
+                    rec.latency = ctx.sim_time - t0
                 else:
                     still.append((rec, goal, t0))
-            pending = still
+            ctx.pending = still
 
-        for rec, goal, t0 in pending:  # ended before regaining progress
-            rec.latency = sim_time - t0
+        for rec, goal, t0 in ctx.pending:  # ended before regaining progress
+            rec.latency = ctx.sim_time - t0
         # barrier before reporting: every handed-over save is durable
         # (wait raises if a background save failed)
-        if mode == "sync":
-            policy.wait()
-        elif stacked_ckpt is not None:
-            stacked_ckpt.wait()
+        tm.wait()
+        # the result surface may need the transport (PS modes pull the
+        # final server state), so capture it before the teardown below
+        final_params = tm.final_params()
+        stacked = tm.stacked_params()
+        stats = tm.mode_stats()
     finally:
         # never leak the writer thread (or a save still mutating
         # ckpt_dir) past an exception unwind; these closes never mask it
-        if mode == "sync":
-            policy.close()
-        elif stacked_ckpt is not None:
-            stacked_ckpt.close(wait=False)
+        tm.close()
         coord.close()  # tears down ProcTransport workers; sim: no-op
 
-    if mode == "sync":
-        final_params = params
-    elif mode == "local_sgd":
-        final_params = jax.tree_util.tree_map(
-            lambda p: jnp.mean(p.astype(jnp.float32), 0), params_w)
-    else:
-        final_params = center
-    loss_curve = [losses[s] for s in sorted(losses)]
-    # sync: each progress step delivers exactly global_batch useful rows
-    # (redone post-restore work is not useful and not re-counted); local
-    # modes: rows actually processed (no rewind, so all work is useful)
-    samples = steps * global_batch if mode == "sync" else samples_done
+    loss_curve = [ctx.losses[s] for s in sorted(ctx.losses)]
     return ElasticRunResult(
         mode=mode, losses=loss_curve,
         final_loss=problem.full_loss(final_params), steps=steps,
-        sim_time=sim_time, samples=samples,
-        recoveries=recoveries, transitions=all_transitions,
-        final_alive=tuple(ids), splits_replanned=replans,
-        stacked_params=None if mode == "sync" else params_w)
+        sim_time=ctx.sim_time, samples=tm.samples(ctx),
+        recoveries=ctx.recoveries, transitions=all_transitions,
+        final_alive=tm.visible_alive(ids), splits_replanned=ctx.replans,
+        stacked_params=stacked, mode_stats=stats)
 
 
 # ---------------------------------------------------------------------------
-# The real LM training loop (launch/train.py --elastic)
+# The real LM training loops (launch/train.py --elastic --mode=...)
 # ---------------------------------------------------------------------------
-def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
-                    batch_abs, pipe_factory: Callable[[int, int], Any],
-                    step0: int = 0) -> Dict[str, Any]:
-    """Elastic synchronous LM training over logical data-parallel workers.
-
-    Each logical worker owns a disjoint pipeline shard; every step the
-    global batch (args.batch rows) is assembled from per-worker slices
-    sized by the current (possibly DBS-replanned) split.  Deaths restore
-    the last checkpoint and rewind; joins just widen the split.
-
-    args.transport selects the control plane: "sim" (default) replays
-    the failure trace on the simulated clock; "proc" runs real worker
-    processes (`cluster.ProcTransport`) with the trace injected against
-    them — same transitions, same training trajectory, real heartbeats.
-    """
+def _make_lm_coordinator(args, trace: FailureTrace, num_hosts: int):
+    """The LM loops' control plane: sim replays the failure trace on the
+    simulated clock; proc runs real worker processes with the trace
+    injected against them (same transitions, real heartbeats)."""
     from repro.cluster.coordinator import Coordinator
     from repro.cluster.sim import SimTransport
+
+    if getattr(args, "transport", "sim") == "proc":
+        from repro.cluster.proc import ProcTransport
+        return Coordinator(ProcTransport(inject=trace), num_hosts)
+    return Coordinator(SimTransport(trace), num_hosts)
+
+
+def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
+                    batch_abs, pipe_factory: Callable[[int, int], Any],
+                    step0: int = 0, opt=None,
+                    loss_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """Elastic LM training over logical data-parallel workers.
+
+    `args.mode` selects the same strategy family as `run_elastic`:
+
+      sync (default)      global batch assembled from per-worker slices
+                          through the jitted `step_fn`; deaths restore
+                          the last checkpoint and rewind
+      local_sgd / easgd   per-worker replicas through the generic
+                          `core.data_parallel` rounds (needs `opt` +
+                          `loss_fn`); deaths drop a replica row, no
+                          rewind
+      async_ps / ssp      workers push grads / pull params against the
+                          transport's ParamServer role (needs
+                          `loss_fn`); server-side SGD-with-momentum,
+                          optional bounded staleness (`args.staleness`)
+
+    Each logical worker owns a disjoint pipeline shard.  args.transport
+    selects the control plane: "sim" (default) replays the failure
+    trace on the simulated clock; "proc" runs real worker processes
+    (`cluster.ProcTransport`) with the trace injected against them —
+    same transitions, same training trajectory, real heartbeats.
+    """
+    mode = getattr(args, "mode", "sync")
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    if mode != "sync":
+        if cfg.arch_type in ("vlm", "audio"):
+            raise NotImplementedError(
+                f"--mode={mode} supports text archs only (extra_embeds "
+                f"stacking is a sync-mode feature so far)")
+        if loss_fn is None:
+            raise ValueError(f"--mode={mode} needs loss_fn=")
+        if mode in ("local_sgd", "easgd"):
+            if opt is None:
+                raise ValueError(f"--mode={mode} needs opt=")
+            return _lm_local_loop(args=args, mode=mode, params=params,
+                                  opt=opt, loss_fn=loss_fn,
+                                  pipe_factory=pipe_factory, step0=step0)
+        return _lm_ps_loop(args=args, mode=mode, params=params,
+                           loss_fn=loss_fn, pipe_factory=pipe_factory,
+                           step0=step0)
 
     trace = (FailureTrace.load(args.failure_trace)
              if args.failure_trace else FailureTrace())
     W0 = args.workers
-    if getattr(args, "transport", "sim") == "proc":
-        from repro.cluster.proc import ProcTransport
-        coord = Coordinator(ProcTransport(inject=trace), W0)
-    else:
-        coord = Coordinator(SimTransport(trace), W0)
+    coord = _make_lm_coordinator(args, trace, W0)
     policy = None
     try:
         policy = SyncCheckpointRestore(args.ckpt_dir,
@@ -528,3 +453,278 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
             "opt_state": opt_state, "final_alive": coord.alive(),
             "transitions": coord.transition_log(),
             "captured_trace": coord.transport.captured_trace()}
+
+
+def _lm_shard_reader(pipe_factory: Callable[[int, int], Any], W0: int):
+    """Per-worker pipeline shards with lazy scale-up, shared by the
+    non-sync LM loops.  Returns rows_from(wid, n) -> first n rows of that
+    worker's next batch."""
+    max_shards = W0 + 16
+    pipes = {w: pipe_factory(w, max_shards) for w in range(W0)}
+    iters = {w: iter(p) for w, p in pipes.items()}
+
+    def rows_from(wid: int, n: int) -> Dict[str, np.ndarray]:
+        if wid not in iters:
+            pipes[wid] = pipe_factory(wid % max_shards, max_shards)
+            iters[wid] = iter(pipes[wid])
+        b = next(iters[wid])
+        return {k: v[:n] for k, v in b.items()}
+
+    return rows_from
+
+
+def _lm_local_loop(*, args, mode: str, params, opt, loss_fn,
+                   pipe_factory: Callable[[int, int], Any],
+                   step0: int = 0) -> Dict[str, Any]:
+    """local_sgd / easgd over the real LM: per-worker replicas run the
+    generic `core.data_parallel` rounds; deaths drop a replica row
+    (`BoundedStalenessContinuation` / `EASGDCenterSurvival`), no rewind."""
+    from repro.checkpoint import AsyncCheckpointer
+    from repro.elastic.recovery import (BoundedStalenessContinuation,
+                                        EASGDCenterSurvival)
+    from repro.elastic.reshard import save_stacked
+
+    trace = (FailureTrace.load(args.failure_trace)
+             if args.failure_trace else FailureTrace())
+    W0 = args.workers
+    K = 4  # local steps per communication round (DESIGN.md §7 staleness)
+    coord = _make_lm_coordinator(args, trace, W0)
+    ckpt = None
+    try:
+        if args.ckpt_dir and getattr(args, "async_ckpt", False):
+            ckpt = AsyncCheckpointer(args.ckpt_dir, keep_last=args.keep_last)
+        rows_from = _lm_shard_reader(pipe_factory, W0)
+
+        params_w = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (W0,) + p.shape), params)
+        if mode == "local_sgd":
+            opt_w = jax.vmap(opt.init)(params_w)
+            policy = BoundedStalenessContinuation()
+            round_j = jax.jit(lambda pw, ow, b: DP.local_sgd_round(
+                loss_fn, pw, opt, ow, b))
+        else:
+            center = params
+            easgd_cfg = DP.EASGDConfig(lr=args.lr)
+            policy = EASGDCenterSurvival()
+            round_j = jax.jit(lambda pw, c, b: DP.easgd_round(
+                loss_fn, pw, c, b, easgd_cfg))
+    except BaseException:
+        if ckpt is not None:
+            ckpt.close(wait=False)
+        coord.close()
+        raise
+
+    ckpt_every = args.ckpt_every or 20
+    losses: Dict[int, float] = {}
+    recoveries: List[RecoveryRecord] = []
+    ids: Tuple[int, ...] = coord.alive()
+    train_step, wall = step0, 0
+
+    def save(step: int) -> None:
+        if not args.ckpt_dir:
+            return
+        save_stacked(args.ckpt_dir, step, params_w, ids,
+                     replicated=(center if mode == "easgd" else None),
+                     metadata={"arch": args.arch, "mode": mode},
+                     keep_last=args.keep_last, checkpointer=ckpt)
+
+    try:
+        while train_step < step0 + args.steps:
+            transitions = coord.advance(wall)
+            deaths = [t for t in transitions if t.kind == "death"]
+            joins = [t for t in transitions if t.kind == "join"]
+            new_ids = coord.alive()
+            if not new_ids:
+                raise RuntimeError(f"wall step {wall}: all workers dead")
+            if deaths or joins:
+                if mode == "local_sgd":
+                    st = policy.apply({"params": params_w, "opt": opt_w},
+                                      ids, new_ids)
+                    params_w, opt_w = st["params"], st["opt"]
+                else:
+                    params_w, center = policy.apply(params_w, center,
+                                                    ids, new_ids)
+                for d in deaths:
+                    recoveries.append(
+                        RecoveryRecord(wall, d.worker, d.cause, 0))
+                    print(f"[elastic/{mode}] wall {wall}: worker {d.worker} "
+                          f"died ({d.cause}); replica dropped, no rewind; "
+                          f"{len(new_ids)} survivors", flush=True)
+            ids = new_ids
+
+            n = max(1, args.batch // (len(ids) * K))
+            per_w = []
+            for w in ids:
+                ks = [rows_from(w, n) for _ in range(K)]
+                per_w.append({k: np.stack([b[k] for b in ks])
+                              for k in ks[0]})
+            batches_wk = {k: np.stack([p[k] for p in per_w])
+                          for k in per_w[0]}
+            if mode == "local_sgd":
+                params_w, opt_w, metrics = round_j(params_w, opt_w,
+                                                   batches_wk)
+            else:
+                params_w, center, metrics = round_j(params_w, center,
+                                                    batches_wk)
+            losses[train_step] = float(metrics["loss"])
+            if train_step % args.log_every == 0:
+                print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
+                      f"workers {len(ids)} mode {mode}", flush=True)
+            train_step += 1
+            wall += 1
+            if train_step % ckpt_every == 0:
+                save(train_step)
+
+        save(train_step)
+        if ckpt is not None:
+            ckpt.wait()
+        if mode == "easgd":
+            final = center
+        else:
+            final = jax.tree_util.tree_map(
+                lambda p: jnp.mean(p.astype(jnp.float32), 0).astype(p.dtype),
+                params_w)
+    finally:
+        if ckpt is not None:
+            ckpt.close()
+        coord.close()
+    return {"losses": [losses[s] for s in sorted(losses)],
+            "recoveries": recoveries, "params": final,
+            "opt_state": None, "final_alive": ids,
+            "transitions": coord.transition_log(),
+            "captured_trace": coord.transport.captured_trace()}
+
+
+def _lm_ps_loop(*, args, mode: str, params, loss_fn,
+                pipe_factory: Callable[[int, int], Any],
+                step0: int = 0) -> Dict[str, Any]:
+    """async_ps / ssp over the real LM: workers push grads / pull params
+    against the transport's ParamServer role (server-side SGD with
+    momentum); ssp additionally bounds the clock gap via the
+    coordinator's `clock_gate` (death-aware).  The PS host is membership
+    id `args.workers`; its death is fatal (the model lives there)."""
+    from repro.checkpoint import (AsyncCheckpointer, save_checkpoint)
+    from repro.checkpoint.ckpt import _flatten, _unflatten_like
+
+    trace = (FailureTrace.load(args.failure_trace)
+             if args.failure_trace else FailureTrace())
+    W0 = args.workers
+    ps_id = W0  # one shard; lives on the extra membership slot
+    staleness = (None if mode == "async_ps"
+                 else int(getattr(args, "staleness", 2)))
+    coord = _make_lm_coordinator(args, trace, W0 + 1)
+    ckpt = None
+    try:
+        if args.ckpt_dir and getattr(args, "async_ckpt", False):
+            ckpt = AsyncCheckpointer(args.ckpt_dir, keep_last=args.keep_last)
+        rows_from = _lm_shard_reader(pipe_factory, W0)
+
+        template = params  # structure + dtypes for pull-side rebuild
+        flat0 = {k: np.asarray(jax.device_get(v), np.float32)
+                 for k, v in _flatten(params).items()}
+        coord.transport.ps_open(ps_id, args.lr, flat0, momentum=0.9)
+        gate = coord.clock_gate(staleness)
+        for w in range(W0):
+            gate.register(w, 0)
+        credit = {w: 0.0 for w in range(W0)}
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    except BaseException:
+        if ckpt is not None:
+            ckpt.close(wait=False)
+        coord.close()
+        raise
+
+    def pull_params():
+        _, entries = coord.transport.ps_pull(ps_id)
+        tflat = _flatten(template)
+        flat = {k: jnp.asarray(entries[k]).astype(tflat[k].dtype)
+                for k in tflat}
+        return _unflatten_like(template, flat)
+
+    ckpt_every = args.ckpt_every or 20
+    n = max(1, args.batch // W0)
+    losses: Dict[int, float] = {}
+    recoveries: List[RecoveryRecord] = []
+    blocked_rounds = 0
+    train_step, wall = step0, 0
+    prev_loss: Optional[float] = None
+
+    def save(step: int, ptree) -> None:
+        if not args.ckpt_dir:
+            return
+        meta = {"arch": args.arch, "mode": mode, "step": step}
+        if ckpt is not None:
+            ckpt.save(step, {"params": ptree}, meta)
+        else:
+            save_checkpoint(args.ckpt_dir, step, {"params": ptree}, meta,
+                            keep_last=args.keep_last)
+
+    try:
+        while train_step < step0 + args.steps:
+            transitions = coord.advance(wall)
+            for t in transitions:
+                if t.kind == "death":
+                    if t.worker == ps_id:
+                        raise RuntimeError(
+                            f"wall step {wall}: parameter server {ps_id} "
+                            f"died ({t.cause}) — PS state is unreplicated")
+                    credit.pop(t.worker, None)
+                    recoveries.append(
+                        RecoveryRecord(wall, t.worker, t.cause, 0))
+                    print(f"[elastic/{mode}] wall {wall}: worker {t.worker} "
+                          f"died ({t.cause}); PS keeps the model, "
+                          f"throughput drops", flush=True)
+                elif t.kind == "join" and t.worker != ps_id:
+                    gate.register(t.worker, gate.min_clock())
+                    credit[t.worker] = 0.0
+            workers = [w for w in coord.alive() if w != ps_id]
+            if not workers:
+                raise RuntimeError(f"wall step {wall}: all workers dead")
+
+            rates = coord.rates()
+            round_losses = []
+            for w in sorted(workers):
+                credit[w] = min(credit.get(w, 0.0) + rates.get(w, 1.0), 1.0)
+                if credit[w] < 1.0:
+                    continue
+                if not gate.can_advance(w):
+                    blocked_rounds += 1
+                    continue
+                credit[w] -= 1.0
+                ptree = pull_params()
+                batch = rows_from(w, n)
+                loss, grads = grad_fn(ptree, batch)
+                gflat = {k: np.asarray(jax.device_get(v), np.float32)
+                         for k, v in _flatten(grads).items()}
+                clock = gate.advance(w)
+                coord.transport.ps_push(ps_id, w, clock, gflat)
+                round_losses.append(float(loss))
+            if round_losses:
+                prev_loss = float(np.mean(round_losses))
+            if prev_loss is not None:
+                losses[train_step] = prev_loss
+            if train_step % args.log_every == 0 and prev_loss is not None:
+                print(f"step {train_step:5d} loss {prev_loss:.4f} "
+                      f"workers {len(workers)} mode {mode}", flush=True)
+            train_step += 1
+            wall += 1
+            if train_step % ckpt_every == 0:
+                save(train_step, pull_params())
+
+        final = pull_params()
+        save(train_step, final)
+        if ckpt is not None:
+            ckpt.wait()
+        final_alive = tuple(w for w in coord.alive() if w != ps_id)
+        transitions_log = coord.transition_log()
+        captured = coord.transport.captured_trace()
+    finally:
+        if ckpt is not None:
+            ckpt.close()
+        coord.close()
+    return {"losses": [losses[s] for s in sorted(losses)],
+            "recoveries": recoveries, "params": final,
+            "opt_state": None, "final_alive": final_alive,
+            "transitions": transitions_log,
+            "captured_trace": captured,
+            "blocked_rounds": blocked_rounds}

@@ -95,9 +95,21 @@ class SyncCheckpointRestore:
 
     def __post_init__(self):
         self._ckpt = (AsyncCheckpointer(self.ckpt_dir,
-                                        keep_last=self.keep_last)
+                                        keep_last=self.keep_last,
+                                        floor_fn=self._gc_floor)
                       if self.async_save else None)
         self.writer_errors: list = []
+
+    def _gc_floor(self) -> Optional[int]:
+        """Retention floor for this host's GC: the fleet minimum over the
+        OTHER hosts' committed steps.  While some host lags behind this
+        one, keep_last must not collect the checkpoint a fleet-wide
+        rewind would land on (the known fast-host retention bug).
+        Excluding self keeps the single-reporting-host case floor-free,
+        i.e. exactly the pre-coordinator retention behavior."""
+        if self.coordinator is None:
+            return None
+        return self.coordinator.rewind_step(exclude=self.host)
 
     def checkpoint(self, step: int, params: Pytree, opt_state: Pytree,
                    metadata: Optional[Dict] = None) -> str:
@@ -108,7 +120,8 @@ class SyncCheckpointRestore:
             path = self._ckpt.save(step, tree, meta)
         else:
             path = save_checkpoint(self.ckpt_dir, step, tree, meta,
-                                   keep_last=self.keep_last)
+                                   keep_last=self.keep_last,
+                                   floor=self._gc_floor())
         self.saved_step = step
         self._report_commit()
         return path

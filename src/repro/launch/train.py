@@ -71,6 +71,18 @@ def train(argv=None) -> dict:
                          "(repro.elastic.membership.FailureTrace)")
     ap.add_argument("--workers", type=int, default=4,
                     help="logical data-parallel workers for --elastic")
+    ap.add_argument("--mode", default="sync",
+                    choices=["sync", "local_sgd", "easgd", "async_ps",
+                             "ssp"],
+                    help="--elastic training mode (repro.elastic.modes): "
+                         "sync all-reduce with checkpoint/rewind recovery "
+                         "(default); local_sgd/easgd per-worker replicas "
+                         "with survivor continuation; async_ps/ssp "
+                         "parameter-server push/pull on the cluster "
+                         "transport")
+    ap.add_argument("--staleness", type=int, default=2,
+                    help="--mode=ssp staleness bound s: a worker may run "
+                         "at most s clocks ahead of the slowest")
     ap.add_argument("--transport", default="sim", choices=["sim", "proc"],
                     help="--elastic control plane: 'sim' replays the "
                          "failure trace on the simulated clock; 'proc' "
@@ -87,9 +99,10 @@ def train(argv=None) -> dict:
     ap.add_argument("--no-async-ckpt", dest="async_ckpt",
                     action="store_false")
     args = ap.parse_args(argv)
-    if args.elastic and not args.ckpt_dir:
-        ap.error("--elastic requires --ckpt-dir (sync recovery restores "
-                 "from the last checkpoint)")
+    if args.elastic and args.mode == "sync" and not args.ckpt_dir:
+        ap.error("--elastic --mode=sync requires --ckpt-dir (sync "
+                 "recovery restores from the last checkpoint); other "
+                 "modes checkpoint only when --ckpt-dir is given")
     if args.async_ckpt is None:
         # elastic checkpoints every ~10-20 steps: a blocking save there
         # steals a full step from every worker, so async is the default
@@ -144,7 +157,8 @@ def train(argv=None) -> dict:
                 pipe_factory=lambda shard, num: make_pipeline(
                     cfg.vocab_size, args.batch, args.seq,
                     shard_id=shard, num_shards=num, seed=args.seed),
-                step0=step0)
+                step0=step0, opt=opt,
+                loss_fn=lambda p, b: MD.lm_loss(p, cfg, b))
             return {"losses": out["losses"],
                     "entropy_floor": entropy_floor,
                     "params": out["params"],

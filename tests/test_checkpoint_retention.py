@@ -147,6 +147,55 @@ def test_sweep_tmp_reports_what_it_removed(tmp_path):
     assert swept == [str(o)] and not o.exists()
 
 
+# ---------------------------------------------------------------------------
+# the fleet rewind floor (the fast-host retention bug)
+# ---------------------------------------------------------------------------
+def test_gc_floor_protects_newest_checkpoint_at_or_below(tmp_path, do_save):
+    d = str(tmp_path)
+    for s in (10, 20, 30, 40):
+        do_save(d, s, _tree(s))
+    # a lagging host has only committed 15: a fleet rewind would target
+    # our newest step <= 15, so keep_last must not collect step 10
+    gc_checkpoints(d, keep_last=2, floor=15)
+    assert _steps(d) == [10, 30, 40]
+    # floor above everything: plain keep_last behavior
+    gc_checkpoints(d, keep_last=2, floor=99)
+    assert _steps(d) == [30, 40]
+
+
+@pytest.mark.parametrize("async_save", [False, True])
+def test_fast_host_retention_respects_fleet_rewind_floor(tmp_path,
+                                                         async_save):
+    """Regression: a fast host's keep_last GC used to collect the very
+    checkpoint a fleet-wide rewind would land on.  With a coordinator
+    attached, the newest step at or below the slowest OTHER host's
+    commit is exempt from retention, so recovery always finds it."""
+    from repro.cluster import Coordinator, SimTransport
+    from repro.elastic import FailureTrace, SyncCheckpointRestore
+
+    with Coordinator(SimTransport(FailureTrace()), 2) as coord:
+        slow = SyncCheckpointRestore(str(tmp_path / "slow"), keep_last=2,
+                                     coordinator=coord, host=0)
+        fast = SyncCheckpointRestore(str(tmp_path / "fast"), keep_last=2,
+                                     async_save=async_save,
+                                     coordinator=coord, host=1)
+        slow.checkpoint(10, _tree(10), _tree(0))   # ... then host 0 stalls
+        for s in (10, 20, 30, 40):
+            fast.checkpoint(s, _tree(s), _tree(0))
+        fast.wait()
+        # keep_last=2 alone would leave [30, 40]; the floor (host 0's
+        # commit = 10) must hold the rewind target on disk
+        assert _steps(tmp_path / "fast") == [10, 30, 40]
+
+        # and the fleet rewind actually lands there and restores it
+        p, _, restored = fast.recover(_tree(0), _tree(0))
+        assert restored == 10
+        np.testing.assert_array_equal(np.asarray(p["w"]),
+                                      np.full((3,), 10.0, np.float32))
+        fast.close()
+        slow.close()
+
+
 @pytest.mark.parametrize("async_save", [False, True])
 def test_retention_through_elastic_recovery_cycle(tmp_path, async_save):
     """End-to-end with the sync recovery policy: checkpoint cadence +

@@ -134,6 +134,43 @@ def test_proc_training_bit_identical_to_sim():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_proc_async_ps_training_bit_identical_to_sim():
+    """The parameter-server role on real processes: 2 workers push/pull
+    against a PS hosted in a third worker process (base64 float32 wire
+    codec), under a death + straggler trace — identical transitions,
+    bit-identical losses, PS parameters, versions, and clocks vs sim."""
+    problem = ElasticProblem()
+    trace = FailureTrace([TraceEvent(5, "fail", 1),
+                          TraceEvent(9, "slow", 2, 0.5)])
+    kw = dict(mode="async_ps", workers=2, steps=12, global_batch=16)
+    sim = run_elastic(problem, trace=trace, **kw)
+    proc = run_elastic(problem, transport=ProcTransport(inject=trace), **kw)
+    assert ([t.as_tuple() for t in proc.transitions] ==
+            [t.as_tuple() for t in sim.transitions])
+    assert proc.losses == sim.losses
+    assert proc.final_loss == sim.final_loss
+    assert proc.mode_stats["versions"] == sim.mode_stats["versions"]
+    assert proc.mode_stats["clocks"] == sim.mode_stats["clocks"]
+    for k, v in sim.mode_stats["ps_params"].items():
+        np.testing.assert_array_equal(proc.mode_stats["ps_params"][k], v)
+
+
+def test_proc_ssp_blocking_identical_to_sim():
+    """SSP's clock gate is coordinator-side state, but the blocked/step
+    pattern must not depend on the transport underneath."""
+    problem = ElasticProblem()
+    trace = FailureTrace([TraceEvent(2, "slow", 1, 0.25)])
+    kw = dict(mode="ssp", staleness=1, workers=2, steps=10,
+              global_batch=16)
+    sim = run_elastic(problem, trace=trace, **kw)
+    proc = run_elastic(problem, transport=ProcTransport(inject=trace), **kw)
+    assert proc.losses == sim.losses
+    assert (proc.mode_stats["blocked_rounds"] ==
+            sim.mode_stats["blocked_rounds"])
+    assert proc.mode_stats["max_clock_gap"] == sim.mode_stats["max_clock_gap"]
+    assert sim.mode_stats["max_clock_gap"] <= 1
+
+
 def test_proc_captured_trace_replays_organic_kill():
     """Trace capture: a worker killed from OUTSIDE (no injection — a real
     preemption) is observed as a fail event, and the captured trace

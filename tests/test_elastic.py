@@ -367,3 +367,25 @@ def test_elastic_lm_launcher_survives_failure(tmp_path):
     # retention held: at most keep-last complete checkpoints on disk
     ckpts = list((tmp_path / "ckpt").glob("step_*"))
     assert 0 < len(ckpts) <= 2
+
+
+@pytest.mark.parametrize("mode", ["local_sgd", "async_ps"])
+def test_elastic_lm_launcher_nonsync_modes(mode, tmp_path):
+    """--mode plumbs the strategy family through the real LM loop: a
+    worker death drops a replica / stops its pushes (lost_steps == 0,
+    never a rewind), and training keeps converging."""
+    from repro.launch.train import train
+    trace = [{"step": 4, "kind": "fail", "worker": 1}]
+    tp = tmp_path / "trace.json"
+    tp.write_text(json.dumps(trace))
+    out = train(["--arch", "qwen3-0.6b", "--smoke", "--steps", "10",
+                 "--batch", "4", "--seq", "32", "--log-every", "100",
+                 "--elastic", "--mode", mode, "--workers", "2",
+                 "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-every", "5",
+                 "--keep-last", "2",
+                 "--failure-trace", str(tp)])
+    assert len(out["losses"]) == 10
+    assert [r.lost_steps for r in out["recoveries"]] == [0]
+    assert out["final_alive"] == (0,)
+    assert out["losses"][-1] < out["losses"][0]     # still learning
+    assert list((tmp_path / "ckpt").glob("step_*"))  # mode checkpoints
