@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, save_checkpoint
+from repro.obs import bench_report
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
@@ -174,9 +175,7 @@ def main(argv=None) -> dict:
         "none": none, "blocking": blocking,
         "async": {**async_, "savings_frac": savings},
     }
-    RESULTS.mkdir(exist_ok=True)
-    out = RESULTS / "checkpoint.json"
-    out.write_text(json.dumps(report, indent=1))
+    out = bench_report("checkpoint", report, RESULTS)
     print(f"wrote {out}")
     return report
 

@@ -31,6 +31,7 @@ from repro.elastic import FailureTrace, TraceEvent
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
 from repro.serving import Request, ServeFleet
+from repro.obs import bench_report
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
@@ -141,9 +142,7 @@ def main(argv=None) -> dict:
     assert routed.get(0, routed.get("0", 0)) < max(others), (
         f"router did not shift work off the straggler: {routed}")
 
-    RESULTS.mkdir(exist_ok=True)
-    out = RESULTS / "elastic_serving.json"
-    out.write_text(json.dumps(report, indent=1))
+    out = bench_report("elastic_serving", report, RESULTS)
     print(f"wrote {out}")
     return report
 

@@ -33,6 +33,7 @@ import time
 from repro.cluster import ProcTransport, SimTransport
 from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
                            run_elastic)
+from repro.obs import bench_report
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
@@ -165,9 +166,7 @@ def main(argv=None) -> dict:
         f"throughput (catastrophic floor: 0.25x) — heartbeat/reader "
         f"contention outside poll() is taxing the train loop")
 
-    RESULTS.mkdir(exist_ok=True)
-    out = RESULTS / "multihost.json"
-    out.write_text(json.dumps(report, indent=1))
+    out = bench_report("multihost", report, RESULTS)
     print(f"wrote {out}")
     return report
 

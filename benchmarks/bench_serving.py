@@ -28,6 +28,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.serve import make_static_fns
 from repro.models import model as MD
 from repro.serving import Request, ServeEngine
+from repro.obs import bench_report
 
 RESULTS = pathlib.Path(__file__).parent / "results"
 
@@ -142,9 +143,7 @@ def main(argv=None):
     report = {"arch": cfg.name, "slots": args.slots,
               "requests": args.requests, "static": static,
               "continuous": cont, "speedup": speedup}
-    RESULTS.mkdir(exist_ok=True)
-    out = RESULTS / "serving.json"
-    out.write_text(json.dumps(report, indent=1))
+    out = bench_report("serving", report, RESULTS)
     print(f"wrote {out}")
     return report
 

@@ -1,0 +1,90 @@
+"""Record an elastic training run and read the trace.
+
+Runs the deterministic elastic driver with one injected worker death
+while the observability spine (`repro.obs`) records, then writes a
+Chrome/Perfetto ``trace.json`` — the same artifact
+``launch/train.py --elastic --trace-out=trace.json`` produces for a
+real LM run.  With ``--transport proc`` the run spawns real worker
+processes: their flight-recorder rings are pulled into the trace, and
+the killed worker's ring is recovered from the flight dump it flushed
+on the way down.
+
+  PYTHONPATH=src python examples/trace_train.py
+  PYTHONPATH=src python examples/trace_train.py --transport proc \
+      --trace-out trace.json --flight-dir flight/
+
+Reading a trace (open trace.json at https://ui.perfetto.dev):
+
+  * Lanes.  One process ("repro"), one thread lane per host: the
+    coordinator/driver on lane "driver", workers on "host 0..N", PS
+    shards on "ps0..".  Simulated runs put all driver-side work on
+    "driver"; proc runs add per-host flight instants and rpc spans.
+  * The "round" spans on the driver lane are training rounds; their
+    duration is *simulated* step time, so a straggler-stretched round
+    is visibly wider.  "epoch" spans cover the membership epochs the
+    coordinator closed; "membership.death"/"membership.join" instants
+    mark why an epoch ended.
+  * A failure shows up as: membership.death instant -> "recovery" span
+    (enclosing "restore" or "reshard" for the mode's policy) -> rounds
+    resume with fewer lanes feeding "elastic.samples_done".
+  * Flight instants (cat "flight") are a host's own last-N ring:
+    "cmd.<verb>" for every command it handled, periodic "beat" marks.
+    For a killed host they come from ``flight_host<id>.json`` — its
+    last words, flushed before exit.
+"""
+import argparse
+import json
+import pathlib
+import tempfile
+
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+from repro.obs import Recorder, load_flight, recording, write_trace
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--transport", default="sim", choices=["sim", "proc"])
+ap.add_argument("--trace-out", default="trace.json")
+ap.add_argument("--flight-dir", default=None,
+                help="--transport=proc: where killed workers flush "
+                     "their flight rings (default: a temp dir)")
+args = ap.parse_args()
+
+trace = FailureTrace([TraceEvent(step=8, kind="fail", worker=1)])
+flight_dir = args.flight_dir or tempfile.mkdtemp(prefix="flight_")
+pathlib.Path(flight_dir).mkdir(parents=True, exist_ok=True)
+
+transport = None
+if args.transport == "proc":
+    from repro.cluster import ProcTransport
+    transport = ProcTransport(inject=trace, flight_dir=flight_dir)
+
+with recording(Recorder()) as rec:
+    res = run_elastic(ElasticProblem(), mode="sync" if transport is None
+                      else "local_sgd", workers=4, steps=20,
+                      global_batch=16,
+                      trace=None if transport else trace,
+                      transport=transport,
+                      **({} if transport else
+                         {"ckpt_dir": tempfile.mkdtemp(prefix="ckpt_"),
+                          "ckpt_every": 5}))
+
+# a killed proc worker can't answer obs_pull — recover its ring from
+# the flight dump it flushed before exiting.  Live hosts' rings were
+# already pulled over the ack channel; merging their dumps too would
+# double every instant, so only lift the hosts the trace is missing.
+pulled = {e.host for e in rec.events if e.cat == "flight"}
+dumps = [d for d in
+         sorted(pathlib.Path(flight_dir).glob("flight_host*.json"))
+         if int(d.stem.removeprefix("flight_host")) not in pulled]
+for dump in dumps:
+    rec.merge(load_flight(dump))
+
+out = write_trace(args.trace_out, rec.events)
+print(f"run: {len(res.losses)} steps, survivors {res.final_alive}, "
+      f"{len(res.recoveries)} recovery(ies), "
+      f"goodput {res.goodput:.2f} samples/sim-s")
+print("metrics:", json.dumps(rec.metrics(), sort_keys=True))
+print(f"trace:   {out} ({len(rec.events)} events) "
+      f"-> open at https://ui.perfetto.dev")
+if dumps:
+    print(f"flight:  {', '.join(str(d) for d in dumps)}")

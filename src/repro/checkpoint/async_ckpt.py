@@ -53,8 +53,10 @@ through the usual queue.
 """
 from __future__ import annotations
 
+import contextlib
 import pathlib
 import threading
+import time
 from typing import Any, Callable, Dict, Optional
 
 import numpy as np
@@ -62,6 +64,7 @@ import numpy as np
 from repro.checkpoint.ckpt import (commit_staged, fsync_staged,
                                    gc_checkpoints, host_snapshot,
                                    latest_step, stage_dirs, write_staged)
+from repro.obs import recorder as obs
 
 Pytree = Any
 
@@ -123,7 +126,10 @@ class AsyncCheckpointer:
             raise RuntimeError("checkpointer is closed")
         # double buffer: stage to host while the writer drains the
         # previous job, then block only on a still-busy writer
-        flat_host, manifest = host_snapshot(step, tree, metadata)
+        rec = obs.get()
+        with rec.span("ckpt.snapshot", cat="ckpt", step=step):
+            flat_host, manifest = host_snapshot(step, tree, metadata)
+        rec.count("ckpt.saves")
         floor = self._floor_fn() if self._floor_fn is not None else None
         with self._cv:
             while self._job is not None:
@@ -199,18 +205,39 @@ class AsyncCheckpointer:
 
     def _write(self, step: int, flat_host: Dict[str, np.ndarray],
                manifest: Dict, floor: Optional[int] = None) -> None:
+        rec = obs.get()
+        # Writer-thread stages get timeline spans only under the real
+        # wall clock: with a simulated clock (run_elastic re-points the
+        # recorder at sim_time) the writer would race the loop thread
+        # for the current tick, making recorded timelines depend on
+        # thread scheduling.  There the stages still count into the
+        # metrics registry, which is scheduling-independent.
+        timeline = rec.enabled and rec.clock is time.monotonic
+
+        def stage(name: str):
+            if timeline:
+                return rec.span("ckpt." + name, host="ckpt", cat="ckpt",
+                                step=step)
+            return contextlib.nullcontext()
+
         tmp, final = stage_dirs(self.ckpt_dir, step)
         self._fail("before_write")
-        write_staged(tmp, flat_host, manifest, fsync=False)
+        with stage("write"):
+            write_staged(tmp, flat_host, manifest, fsync=False)
         self._fail("before_fsync")
         if self.fsync:
-            fsync_staged(tmp)
+            with stage("fsync"):
+                fsync_staged(tmp)
         self._fail("after_fsync_before_rename")
-        commit_staged(tmp, final, fsync=self.fsync, failpoint=self._fail)
+        with stage("commit"):
+            commit_staged(tmp, final, fsync=self.fsync,
+                          failpoint=self._fail)
         with self._cv:  # committed even if GC below dies
             self._committed = step
+        rec.count("ckpt.commits")
         self._fail("after_commit_before_gc")
         if self.keep_last:
-            gc_checkpoints(self.ckpt_dir, self.keep_last,
-                           on_remove=lambda _p: self._fail("mid_gc"),
-                           floor=floor)
+            with stage("gc"):
+                gc_checkpoints(self.ckpt_dir, self.keep_last,
+                               on_remove=lambda _p: self._fail("mid_gc"),
+                               floor=floor)

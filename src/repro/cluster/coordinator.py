@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.elastic.membership import (DEAD, FailureTrace, Membership,
                                       Transition)
 from repro.elastic.straggler import ThroughputMonitor, replan_on_straggle
+from repro.obs import recorder as obs
 
 from repro.cluster.sim import SimTransport
 from repro.cluster.transport import Transport
@@ -66,6 +67,7 @@ class Coordinator:
         self.transitions: List[Transition] = []
         self._subs: Dict[str, List[Callable[[Transition], None]]] = {}
         self._commits: Dict[int, int] = {}
+        self._epoch_t0: Optional[float] = None  # obs: current epoch start
         try:
             self.transport.start(num_workers)
         except BaseException:
@@ -109,19 +111,30 @@ class Coordinator:
         epoch/telemetry/commits, notify subscribers."""
         events = self.transport.poll(wall)
         transitions = self.membership.apply(wall, events)
+        rec = obs.get()
+        if rec.enabled and self._epoch_t0 is None:
+            self._epoch_t0 = rec.clock()
         changed = False
         for t in transitions:
             if t.kind == "rate":
-                # telemetry: the worker's observed relative throughput
-                self.monitor.observe(t.worker, t.rate, 1.0)
+                # telemetry: the trace-reported rate is authoritative —
+                # it fires once per change, so it pins (no EMA blend)
+                self.monitor.set_rate(t.worker, t.rate)
             elif t.kind == "death":
                 changed = True
                 self.monitor.forget(t.worker)
                 self._commits.pop(t.worker, None)
             elif t.kind == "join":
                 changed = True
+            if rec.enabled:
+                rec.event("membership." + t.kind, host=t.worker,
+                          cat="cluster", cause=t.cause, rate=t.rate,
+                          wall=wall)
         if changed:
             self.epoch += 1
+            if rec.enabled:
+                self._close_epoch_span(rec)
+                rec.gauge("cluster.epoch", self.epoch)
         if self.keep_transition_log:
             self.transitions.extend(transitions)
         for host, step in self.transport.commit_reports():
@@ -130,6 +143,15 @@ class Coordinator:
             for fn in self._subs.get(t.kind, ()):
                 fn(t)
         return transitions
+
+    def _close_epoch_span(self, rec) -> None:
+        """Emit the just-ended epoch as a span [epoch start, now)."""
+        now = rec.clock()
+        t0 = self._epoch_t0 if self._epoch_t0 is not None else now
+        rec.complete("epoch", t0, now - t0, cat="cluster",
+                     epoch=self.epoch - 1,
+                     alive=list(self.membership.alive()))
+        self._epoch_t0 = now
 
     # -- straggler-aware work planning ---------------------------------
     def plan_split(self, global_batch: int, *,
@@ -154,7 +176,15 @@ class Coordinator:
         ws = self.membership.workers.get(host)
         if ws is not None and ws.status == DEAD:
             return
+        rec = obs.get()
+        if rec.enabled and self._commits.get(host) != int(step):
+            rec.event("commit.report", host=host, cat="cluster",
+                      step=int(step))
         self._commits[host] = int(step)
+        if rec.enabled:
+            floor = self.rewind_step()
+            if floor is not None:
+                rec.gauge("cluster.rewind_floor", floor)
 
     def rewind_step(self, *, exclude: Optional[int] = None) -> Optional[int]:
         """The fleet-wide safe recovery step: the minimum committed step
@@ -211,6 +241,10 @@ class Coordinator:
 
     # -- lifecycle -----------------------------------------------------
     def close(self) -> None:
+        rec = obs.get()
+        if rec.enabled and self._epoch_t0 is not None:
+            self._close_epoch_span(rec)
+            self._epoch_t0 = None
         self.transport.close()
 
     def __enter__(self) -> "Coordinator":

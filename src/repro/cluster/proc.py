@@ -53,6 +53,8 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.cluster.transport import Transport
+from repro.obs import recorder as obs
+from repro.obs.flight import FlightRecorder
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +82,10 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                               apply a gradient push; ack carries the
                               new shard version
       {"v": "ps_pull"}        ack carries (version, entries)
-      {"v": "stop"}           clean shutdown
+      {"v": "obs_pull"}       ack carries the flight-recorder ring (the
+                              worker's last N events, worker-relative
+                              timestamps) for merging into a trace
+      {"v": "stop"}           clean shutdown (flushes the flight ring)
     Every command except die/stop is acknowledged on stdout so an
     injecting transport can emit the event at a deterministic wall step
     (ps_* acks double as RPC replies).  Array payloads ride as base64
@@ -94,12 +99,23 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--wid", type=int, required=True)
     ap.add_argument("--heartbeat-every", type=float, default=0.005)
+    ap.add_argument("--flight-dir", default=None)
     args = ap.parse_args(argv)
 
     out = sys.stdout
     rate, committed, hung, seq = 1.0, None, False, 0
     ps = None                       # PSShard once ps_open arrives
     buf = b""
+    # flight recorder: a bounded ring of this worker's recent events,
+    # flushed to disk on die/stop/SIGTERM so the post-mortem of a killed
+    # host shows its last N events (timestamps relative to worker start)
+    flight = FlightRecorder(args.wid)
+    if args.flight_dir:
+        flight.install_sigterm(args.flight_dir)
+
+    def _flush_flight(reason: str) -> None:
+        if args.flight_dir:
+            flight.flush(args.flight_dir, reason=reason)
 
     def emit(obj) -> None:
         out.write(json.dumps(obj) + "\n")
@@ -110,6 +126,7 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
         if ready:
             chunk = os.read(0, 65536)
             if not chunk:
+                _flush_flight("eof")
                 return                      # coordinator went away
             buf += chunk
             while b"\n" in buf:
@@ -119,10 +136,18 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                 cmd = json.loads(line)
                 verb = cmd["v"]
                 reply: Dict[str, Any] = {}
+                flight.note("cmd." + verb,
+                            **{k: v for k, v in cmd.items()
+                               if k != "v" and isinstance(v, (int, float,
+                                                              str))})
                 if verb == "die":
+                    _flush_flight("die")
                     os._exit(1)             # no ack, no cleanup: a crash
                 elif verb == "stop":
+                    _flush_flight("stop")
                     return
+                elif verb == "obs_pull":
+                    reply["events"] = flight.snapshot()
                 elif verb == "hang":
                     hung = True
                 elif verb == "recover":
@@ -149,6 +174,8 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                 emit({"t": "ack", "verb": verb, **reply})
         if not hung:
             seq += 1
+            if seq == 1 or seq % 64 == 0:   # beat context, ring-friendly
+                flight.note("beat", seq=seq, rate=rate)
             emit({"t": "beat", "seq": seq, "rate": rate,
                   "committed": committed})
 
@@ -180,11 +207,13 @@ class _Handle:
     rate_seen: float = 1.0        # last rate carried by a beat
     committed: Optional[int] = None
     commit_dirty: bool = False
+    spawned: float = 0.0          # driver monotonic at spawn (obs offset)
 
 
 class ProcTransport(Transport):
     def __init__(self, *, inject=None, heartbeat_every: float = 0.05,
-                 silence_after: float = 30.0, ack_timeout: float = 60.0):
+                 silence_after: float = 30.0, ack_timeout: float = 60.0,
+                 flight_dir: Optional[str] = None):
         """inject: optional FailureTrace to actuate against the real
         processes (None = purely observational).  heartbeat_every: the
         workers' beat period — only the real-time granularity of organic
@@ -195,8 +224,11 @@ class ProcTransport(Transport):
         lax by default so driver stalls (e.g. jit compiles between
         polls) are never misread as worker failures; tighten it (with a
         proportionally smaller heartbeat_every) to exercise the organic
-        silence path."""
+        silence path.  flight_dir: directory worker children flush
+        their flight-recorder rings to on die/stop/SIGTERM (None =
+        flight recording off)."""
         self._inject = inject
+        self.flight_dir = flight_dir
         self.heartbeat_every = heartbeat_every
         self.silence_after = silence_after
         self.ack_timeout = ack_timeout
@@ -224,13 +256,16 @@ class ProcTransport(Transport):
         env = dict(os.environ)
         src = str(pathlib.Path(__file__).resolve().parents[2])
         env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        argv = [sys.executable, "-m", "repro.cluster.proc",
+                "--wid", str(wid),
+                "--heartbeat-every", str(self.heartbeat_every)]
+        if self.flight_dir:
+            argv += ["--flight-dir", str(self.flight_dir)]
         p = subprocess.Popen(
-            [sys.executable, "-m", "repro.cluster.proc",
-             "--wid", str(wid),
-             "--heartbeat-every", str(self.heartbeat_every)],
-            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            argv, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
             env=env, text=False)
         h = _Handle(wid, p)        # last_beat None until the first beat
+        h.spawned = time.monotonic()
         threading.Thread(target=_reader, args=(wid, p.stdout, self._msg_q),
                          name=f"cluster-reader-{wid}", daemon=True).start()
         self._workers[wid] = h
@@ -325,25 +360,29 @@ class ProcTransport(Transport):
 
     def _await_reply(self, wid: int, verb: str) -> Optional[Dict]:
         """The ack payload for `verb` (RPC reply), or None if the
-        worker's pipe hit EOF first (it died mid-command)."""
+        worker's pipe hit EOF first (it died mid-command).  The wait is
+        a span on the worker's lane — this is the per-command heartbeat
+        RPC latency the trace shows."""
         deadline = time.monotonic() + self.ack_timeout
-        while True:
-            w, payload = self._next_msg(deadline,
-                                        f"{verb} ack from worker {wid}")
-            if w != wid:
-                continue
-            t = payload.get("t")
-            if t == "ack" and payload.get("verb") == verb:
-                return payload
-            if t == "eof":
-                return None
+        with obs.get().span("rpc." + verb, host=wid, cat="proc"):
+            while True:
+                w, payload = self._next_msg(deadline,
+                                            f"{verb} ack from worker {wid}")
+                if w != wid:
+                    continue
+                t = payload.get("t")
+                if t == "ack" and payload.get("verb") == verb:
+                    return payload
+                if t == "eof":
+                    return None
 
     def _await_beat(self, h: _Handle) -> None:
         """Block until the worker's first beat (already-noted beats from
         interleaved waits count — last_beat leaves None exactly once)."""
         deadline = time.monotonic() + self.ack_timeout
-        while h.last_beat is None:
-            self._next_msg(deadline, f"first beat from worker {h.wid}")
+        with obs.get().span("rpc.first_beat", host=h.wid, cat="proc"):
+            while h.last_beat is None:
+                self._next_msg(deadline, f"first beat from worker {h.wid}")
 
     # -- injection: actuate a trace event against real processes ------
     def _actuate(self, step: int, ev) -> List[Any]:
@@ -420,6 +459,10 @@ class ProcTransport(Transport):
 
     # -- the detector --------------------------------------------------
     def poll(self, step: int) -> List[Any]:
+        with obs.get().span("transport.poll", cat="proc", step=step):
+            return self._poll(step)
+
+    def _poll(self, step: int) -> List[Any]:
         from repro.elastic.membership import TraceEvent
 
         events: List[Any] = []
@@ -509,6 +552,34 @@ class ProcTransport(Transport):
         from repro.core.param_server import decode_entries
         reply = self._ps_rpc(ps_id, {"v": "ps_pull"})
         return reply["version"], decode_entries(reply["entries"])
+
+    # -- observability -------------------------------------------------
+    def host_events(self) -> List[Any]:
+        """Pull the surviving workers' flight rings over the ack channel
+        and lift them into recorder `Event`s.  Worker timestamps are
+        relative to worker start; they are shifted by the driver-observed
+        spawn time, so per-host lanes are exact in order and host-local
+        spacing (cross-host alignment is approximate — see repro.obs).
+        Dead workers can't answer; their rings are on disk (flight_dir)."""
+        from repro.obs.recorder import Event
+
+        out: List[Any] = []
+        for wid in sorted(self._workers):
+            h = self._workers[wid]
+            if h.dead or h.proc.poll() is not None:
+                continue
+            reply = self._await_reply_send(h, {"v": "obs_pull"})
+            if reply is None:
+                continue
+            for e in reply.get("events", ()):
+                out.append(Event(ts=h.spawned + e["ts"], host=wid, ph="i",
+                                 name=e["name"], cat="flight",
+                                 args=e.get("args")))
+        return out
+
+    def _await_reply_send(self, h: _Handle, msg: Dict) -> Optional[Dict]:
+        self._send(h, msg)
+        return self._await_reply(h.wid, msg["v"])
 
     def host_devices(self) -> Dict[int, Any]:
         import jax  # coordinator-side only; workers never reach here

@@ -15,6 +15,7 @@ from typing import Any, Dict, List, Optional
 from repro.elastic.membership import FailureTrace, TraceEvent
 
 from repro.cluster.transport import Transport
+from repro.obs import recorder as obs
 
 
 class SimTransport(Transport):
@@ -44,17 +45,24 @@ class SimTransport(Transport):
         return {}
 
     # -- ParamServer role ---------------------------------------------
+    # ps ops are spans (not instants) for uniformity with ProcTransport:
+    # under the simulated clock they have zero duration, but the trace
+    # still shows each push/pull on the shard's lane in order.
     def ps_open(self, ps_id: int, lr: float, entries, momentum=0.0) -> None:
         from repro.core.param_server import PSShard
-        shard = PSShard(lr, momentum=momentum)
-        shard.init(entries)
-        self._ps[ps_id] = shard
+        with obs.get().span("ps.open", host=f"ps{ps_id}", cat="ps"):
+            shard = PSShard(lr, momentum=momentum)
+            shard.init(entries)
+            self._ps[ps_id] = shard
 
     def ps_push(self, ps_id: int, worker: int, clock: int, grads) -> int:
-        return self._ps[ps_id].push(worker, clock, grads)
+        with obs.get().span("ps.push", host=f"ps{ps_id}", cat="ps",
+                            worker=worker, clock=clock):
+            return self._ps[ps_id].push(worker, clock, grads)
 
     def ps_pull(self, ps_id: int):
-        return self._ps[ps_id].pull()
+        with obs.get().span("ps.pull", host=f"ps{ps_id}", cat="ps"):
+            return self._ps[ps_id].pull()
 
     def captured_trace(self) -> FailureTrace:
         """A simulated run observes exactly its input trace."""

@@ -44,6 +44,8 @@ from repro.core import data_parallel as DP  # noqa: F401  (re-export; the
 from repro.elastic.membership import FailureTrace, Transition
 from repro.elastic.recovery import SyncCheckpointRestore
 from repro.elastic.straggler import step_time  # noqa: F401  (re-export)
+from repro.obs import log
+from repro.obs import recorder as obs
 from repro.optim.optimizers import sgd_momentum
 
 Pytree = Any
@@ -51,6 +53,19 @@ Pytree = Any
 # the mode registry lives with the strategies; re-exported here because
 # this is where consumers historically imported it from
 from repro.elastic.modes import MODES, ModeContext  # noqa: E402
+
+
+def _merge_host_events(rec, transport) -> None:
+    """Pull surviving workers' flight rings onto the recorder timeline.
+    No-op for transports without per-host event streams (sim), and
+    best-effort for proc: post-mortem sugar must never fail a run."""
+    pull = getattr(transport, "host_events", None)
+    if pull is None:
+        return
+    try:
+        rec.merge(pull())
+    except Exception as e:          # noqa: BLE001
+        log.warning("[obs] host event pull failed: %s", e)
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +242,12 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
         async_ckpt=async_ckpt, staleness=staleness, num_ps=num_ps,
         nominal_t=global_batch / workers)
 
+    # observability: spans land on the *simulated* clock, so a replayed
+    # trace emits a bit-identical timeline (tests/test_obs.py pins this)
+    orec = obs.get()
+    if orec.enabled:
+        orec.clock = lambda: ctx.sim_time
+
     # ---- per-mode state -------------------------------------------------
     # setup failures here unwind before the main loop's finally is armed,
     # so close the coordinator (live ProcTransport workers) explicitly
@@ -256,10 +277,20 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 raise RuntimeError(f"wall step {wall}: all workers dead")
 
             if deaths or joins:
-                tm.on_membership_change(ctx, deaths, joins, ids, new_ids)
+                # the span brackets restore/reshard, so its duration is
+                # the simulated recovery cost the mode charged
+                with orec.span("recovery", cat="elastic", wall=wall,
+                               deaths=[t.worker for t in deaths],
+                               joins=[t.worker for t in joins]):
+                    tm.on_membership_change(ctx, deaths, joins, ids,
+                                            new_ids)
             ids = new_ids
 
-            tm.run_round(ctx, ids, coord.rates())
+            # run_round advances ctx.sim_time, so dur == this round's
+            # simulated step time (straggler bound + overheads)
+            with orec.span("round", cat="elastic", step=ctx.train_step,
+                           wall=wall, workers=len(ids)):
+                tm.run_round(ctx, ids, coord.rates())
 
             ctx.train_step += 1
             wall += 1
@@ -283,6 +314,17 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
         final_params = tm.final_params()
         stacked = tm.stacked_params()
         stats = tm.mode_stats()
+        if orec.enabled:
+            # goodput comes off the registry now, not ad-hoc arithmetic
+            # scattered through result consumers
+            n_samples = tm.samples(ctx)
+            orec.gauge("elastic.samples", float(n_samples))
+            orec.gauge("elastic.sim_time", ctx.sim_time)
+            orec.gauge("elastic.goodput",
+                       n_samples / max(ctx.sim_time, 1e-9))
+            orec.gauge("elastic.replans", ctx.replans)
+            orec.gauge("elastic.recoveries", len(ctx.recoveries))
+            _merge_host_events(orec, coord.transport)
     finally:
         # never leak the writer thread (or a save still mutating
         # ckpt_dir) past an exception unwind; these closes never mask it
@@ -311,7 +353,10 @@ def _make_lm_coordinator(args, trace: FailureTrace, num_hosts: int):
 
     if getattr(args, "transport", "sim") == "proc":
         from repro.cluster.proc import ProcTransport
-        return Coordinator(ProcTransport(inject=trace), num_hosts)
+        return Coordinator(
+            ProcTransport(inject=trace,
+                          flight_dir=getattr(args, "flight_dir", None)),
+            num_hosts)
     return Coordinator(SimTransport(trace), num_hosts)
 
 
@@ -404,15 +449,18 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
             transitions = coord.advance(wall)
             deaths = [t for t in transitions if t.kind == "death"]
             if deaths:
-                params, opt_state, restored = policy.recover(params, opt_state)
+                with obs.get().span("recovery", cat="elastic", wall=wall,
+                                    deaths=[t.worker for t in deaths]):
+                    params, opt_state, restored = policy.recover(params,
+                                                                 opt_state)
                 lost = train_step - restored
                 for d in deaths:
                     recoveries.append(
                         RecoveryRecord(wall, d.worker, d.cause, lost))
-                print(f"[elastic] wall {wall}: worker(s) "
-                      f"{[d.worker for d in deaths]} died ({deaths[0].cause}); "
-                      f"restored step {restored} (lost {lost} steps), "
-                      f"{len(coord.alive())} survivors", flush=True)
+                log.info("[elastic] wall %d: worker(s) %s died (%s); "
+                         "restored step %d (lost %d steps), %d survivors",
+                         wall, [d.worker for d in deaths], deaths[0].cause,
+                         restored, lost, len(coord.alive()))
                 train_step = restored
 
             alive = coord.alive()
@@ -420,8 +468,8 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
                 raise RuntimeError(f"wall step {wall}: all workers dead")
             split, slow = coord.plan_split(args.batch, alive=alive)
             if slow and wall % args.log_every == 0:
-                print(f"[elastic] stragglers {list(slow)}; split "
-                      f"{[split[w] for w in alive]}", flush=True)
+                log.info("[elastic] stragglers %s; split %s", list(slow),
+                         [split[w] for w in alive])
 
             parts = [rows_from(w, split[w]) for w in alive if split[w] > 0]
             batch = {k: np.concatenate([p[k] for p in parts], axis=0)
@@ -431,11 +479,14 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
             if cfg.arch_type in ("vlm", "audio"):
                 ee = batch_abs["extra_embeds"]
                 dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
-            params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
+            with obs.get().span("lm.step", cat="elastic", step=train_step,
+                                workers=len(alive)):
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     dev_batch)
             losses[train_step] = float(metrics["loss"])
             if train_step % args.log_every == 0:
-                print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
-                      f"workers {len(alive)}", flush=True)
+                log.info("step %5d loss %.4f workers %d", train_step,
+                         losses[train_step], len(alive))
             train_step += 1
             wall += 1
             if train_step % ckpt_every == 0:
@@ -445,6 +496,9 @@ def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,
         policy.checkpoint(train_step, params, opt_state,
                           {"arch": args.arch})
         policy.wait()  # barrier: the final save is durable before we return
+        rec = obs.get()
+        if rec.enabled:
+            _merge_host_events(rec, coord.transport)
     finally:
         policy.close()  # never leak the writer past an exception unwind
         coord.close()   # tears down ProcTransport workers; sim: no-op
@@ -547,9 +601,9 @@ def _lm_local_loop(*, args, mode: str, params, opt, loss_fn,
                 for d in deaths:
                     recoveries.append(
                         RecoveryRecord(wall, d.worker, d.cause, 0))
-                    print(f"[elastic/{mode}] wall {wall}: worker {d.worker} "
-                          f"died ({d.cause}); replica dropped, no rewind; "
-                          f"{len(new_ids)} survivors", flush=True)
+                    log.info("[elastic/%s] wall %d: worker %d died (%s); "
+                             "replica dropped, no rewind; %d survivors",
+                             mode, wall, d.worker, d.cause, len(new_ids))
             ids = new_ids
 
             n = max(1, args.batch // (len(ids) * K))
@@ -568,8 +622,8 @@ def _lm_local_loop(*, args, mode: str, params, opt, loss_fn,
                                                     batches_wk)
             losses[train_step] = float(metrics["loss"])
             if train_step % args.log_every == 0:
-                print(f"step {train_step:5d} loss {losses[train_step]:.4f} "
-                      f"workers {len(ids)} mode {mode}", flush=True)
+                log.info("step %5d loss %.4f workers %d mode %s",
+                         train_step, losses[train_step], len(ids), mode)
             train_step += 1
             wall += 1
             if train_step % ckpt_every == 0:
@@ -671,9 +725,9 @@ def _lm_ps_loop(*, args, mode: str, params, loss_fn,
                     credit.pop(t.worker, None)
                     recoveries.append(
                         RecoveryRecord(wall, t.worker, t.cause, 0))
-                    print(f"[elastic/{mode}] wall {wall}: worker {t.worker} "
-                          f"died ({t.cause}); PS keeps the model, "
-                          f"throughput drops", flush=True)
+                    log.info("[elastic/%s] wall %d: worker %d died (%s); "
+                             "PS keeps the model, throughput drops",
+                             mode, wall, t.worker, t.cause)
                 elif t.kind == "join" and t.worker != ps_id:
                     gate.register(t.worker, gate.min_clock())
                     credit[t.worker] = 0.0
@@ -704,8 +758,8 @@ def _lm_ps_loop(*, args, mode: str, params, loss_fn,
             if prev_loss is not None:
                 losses[train_step] = prev_loss
             if train_step % args.log_every == 0 and prev_loss is not None:
-                print(f"step {train_step:5d} loss {prev_loss:.4f} "
-                      f"workers {len(workers)} mode {mode}", flush=True)
+                log.info("step %5d loss %.4f workers %d mode %s",
+                         train_step, prev_loss, len(workers), mode)
             train_step += 1
             wall += 1
             if train_step % ckpt_every == 0:

@@ -52,6 +52,7 @@ from repro.elastic.recovery import (BoundedStalenessContinuation,
                                     SyncCheckpointRestore)
 from repro.elastic.reshard import save_stacked
 from repro.elastic.straggler import step_time
+from repro.obs import recorder as obs
 
 Pytree = Any
 
@@ -89,6 +90,13 @@ class ModeContext:
     # (record, goal step, t0): latency closes when progress regains goal
     pending: List[Tuple[Any, int, float]] = dataclasses.field(
         default_factory=list)
+
+    def add_samples(self, n: int) -> None:
+        """Count useful rows (the goodput numerator) — also bumps the
+        recorder registry, so goodput is an emitted metric rather than
+        ad-hoc arithmetic (no-op when recording is disabled)."""
+        self.samples_done += n
+        obs.get().count("elastic.samples_done", n)
 
 
 class TrainingMode(abc.ABC):
@@ -180,12 +188,15 @@ class SyncAllReduce(TrainingMode):
 
         if not deaths:
             return  # joins just widen the next split
-        # the in-flight collective died: restore + rewind
-        self.params, self.opt_state, restored = self.policy.recover(
-            self.params, self.opt_state)
-        lost = ctx.train_step - restored
-        pause = ctx.restore_penalty * ctx.nominal_t
-        ctx.sim_time += pause
+        # the in-flight collective died: restore + rewind.  The span's
+        # duration is the simulated restore pause it charges.
+        with obs.get().span("restore", cat="elastic",
+                            wall=ctx.train_step):
+            self.params, self.opt_state, restored = self.policy.recover(
+                self.params, self.opt_state)
+            lost = ctx.train_step - restored
+            pause = ctx.restore_penalty * ctx.nominal_t
+            ctx.sim_time += pause
         for d in deaths:
             rec = RecoveryRecord(d.step, d.worker, d.cause, lost)
             ctx.recoveries.append(rec)
@@ -275,7 +286,7 @@ class _StackedReplicaMode(TrainingMode):
                                             threshold=ctx.straggle_threshold)
         else:
             split = {w: n for w in ids}
-        ctx.samples_done += ctx.K * sum(split.values())
+        ctx.add_samples(ctx.K * sum(split.values()))
         batch = ctx.problem.stack(ids, ctx.train_step, split, K=ctx.K)
         batches_wk = {k: jnp.asarray(v) for k, v in batch.items()}
         m = self._round_compute(ctx, batches_wk)
@@ -316,12 +327,14 @@ class LocalSGD(_StackedReplicaMode):
     def on_membership_change(self, ctx, deaths, joins, old_ids, new_ids):
         from repro.elastic.driver import RecoveryRecord
 
-        st = self.policy.apply({"params": self.params_w, "opt": self.opt_w},
-                               old_ids, new_ids)
-        # survivor rows land on their host's device on the shrunken mesh
-        # (identity under simulated transports)
-        self.params_w = ctx.coord.place_rows(st["params"], new_ids)
-        self.opt_w = ctx.coord.place_rows(st["opt"], new_ids)
+        with obs.get().span("reshard", cat="elastic",
+                            old=list(old_ids), new=list(new_ids)):
+            st = self.policy.apply({"params": self.params_w,
+                                    "opt": self.opt_w}, old_ids, new_ids)
+            # survivor rows land on their host's device on the shrunken
+            # mesh (identity under simulated transports)
+            self.params_w = ctx.coord.place_rows(st["params"], new_ids)
+            self.opt_w = ctx.coord.place_rows(st["opt"], new_ids)
         for d in deaths:
             ctx.recoveries.append(
                 RecoveryRecord(d.step, d.worker, d.cause, 0))
@@ -356,9 +369,11 @@ class EASGD(_StackedReplicaMode):
     def on_membership_change(self, ctx, deaths, joins, old_ids, new_ids):
         from repro.elastic.driver import RecoveryRecord
 
-        self.params_w, self.center = self.policy.apply(
-            self.params_w, self.center, old_ids, new_ids)
-        self.params_w = ctx.coord.place_rows(self.params_w, new_ids)
+        with obs.get().span("reshard", cat="elastic",
+                            old=list(old_ids), new=list(new_ids)):
+            self.params_w, self.center = self.policy.apply(
+                self.params_w, self.center, old_ids, new_ids)
+            self.params_w = ctx.coord.place_rows(self.params_w, new_ids)
         for d in deaths:
             ctx.recoveries.append(
                 RecoveryRecord(d.step, d.worker, d.cause, 0))
@@ -490,7 +505,7 @@ class _ParamServerMode(TrainingMode):
                 continue
             self.credit[w] -= 1.0
             round_losses.append(self._worker_step(ctx, w))
-            ctx.samples_done += self.n
+            ctx.add_samples(self.n)
         for w in workers:
             self.max_gap = max(self.max_gap, self.gate.gap(w))
         if round_losses:

@@ -30,10 +30,22 @@ class ThroughputMonitor:
     ema: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     def observe(self, worker: int, samples: float, seconds: float) -> None:
+        """Fold one measured (samples, seconds) interval into the EMA.
+
+        A cold worker's EMA seeds from `nominal` and blends, never from
+        the first raw rate: a join replica's first observation is
+        compile-inflated (warmup `seconds`), and seeding from it pinned
+        the EMA low for several rounds, starving the joiner of work.
+        """
         rate = samples / max(seconds, 1e-9)
-        prev = self.ema.get(worker)
-        self.ema[worker] = rate if prev is None else \
-            self.decay * prev + (1 - self.decay) * rate
+        prev = self.ema.get(worker, self.nominal)
+        self.ema[worker] = self.decay * prev + (1 - self.decay) * rate
+
+    def set_rate(self, worker: int, rate: float) -> None:
+        """Authoritatively pin a worker's rate (no EMA blend). Used for
+        trace-reported rate transitions, which fire once per change and
+        are ground truth, not noisy measurements."""
+        self.ema[worker] = rate
 
     def forget(self, worker: int) -> None:
         self.ema.pop(worker, None)

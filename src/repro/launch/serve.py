@@ -37,6 +37,7 @@ from repro.core import sharding as SH
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import sharded_argmax
 from repro.models import model as MD
+from repro.obs import recorder as obs
 
 
 def _make_extra(cfg, B):
@@ -162,7 +163,8 @@ def _serve_fleet(params, cfg, args):
     transport = None
     if args.transport == "proc":
         from repro.cluster import ProcTransport
-        transport = ProcTransport(inject=trace)
+        transport = ProcTransport(inject=trace,
+                                  flight_dir=args.flight_dir)
     n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
     fleet = ServeFleet(params, cfg, replicas=args.replicas,
                        num_slots=args.batch,
@@ -220,8 +222,29 @@ def serve(argv=None) -> dict:
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="record the run and write a Chrome/Perfetto "
+                         "trace.json here (open in ui.perfetto.dev); "
+                         "see repro.obs")
+    ap.add_argument("--flight-dir", default=None,
+                    help="--transport=proc: directory where dying/"
+                         "stopped replicas flush their flight-recorder "
+                         "ring (flight_host<id>.json)")
     args = ap.parse_args(argv)
 
+    if not args.trace_out:
+        return _serve(args)
+    from repro.obs.trace import write_trace
+    with obs.recording(obs.Recorder()) as rec:
+        try:
+            return _serve(args)
+        finally:
+            write_trace(args.trace_out, rec.events)
+            print(f"wrote trace: {args.trace_out} "
+                  f"({len(rec.events)} events)", flush=True)
+
+
+def _serve(args) -> dict:
     cfg = get_config(args.arch, smoke=args.smoke)
     if jax.default_backend() == "cpu":
         cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
@@ -238,4 +261,6 @@ def serve(argv=None) -> dict:
 
 
 if __name__ == "__main__":
+    from repro.obs import log as _log
+    _log.configure()  # CLI runs show [info] progress; library use stays quiet
     serve()

@@ -34,6 +34,7 @@ from repro.data import make_pipeline
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import batch_pspecs, batch_abstract, make_train_step
 from repro.models import model as MD
+from repro.obs import recorder as obs
 from repro.optim.optimizers import get_optimizer, warmup_cosine
 
 ENVS = {
@@ -98,6 +99,14 @@ def train(argv=None) -> dict:
                          "default: on for --elastic, off otherwise")
     ap.add_argument("--no-async-ckpt", dest="async_ckpt",
                     action="store_false")
+    ap.add_argument("--trace-out", default=None,
+                    help="record the run and write a Chrome/Perfetto "
+                         "trace.json here (open in ui.perfetto.dev); "
+                         "see repro.obs")
+    ap.add_argument("--flight-dir", default=None,
+                    help="--transport=proc: directory where dying/"
+                         "stopped workers flush their flight-recorder "
+                         "ring (flight_host<id>.json)")
     args = ap.parse_args(argv)
     if args.elastic and args.mode == "sync" and not args.ckpt_dir:
         ap.error("--elastic --mode=sync requires --ckpt-dir (sync "
@@ -108,6 +117,19 @@ def train(argv=None) -> dict:
         # steals a full step from every worker, so async is the default
         args.async_ckpt = args.elastic
 
+    if not args.trace_out:
+        return _train(args)
+    from repro.obs.trace import write_trace
+    with obs.recording(obs.Recorder()) as rec:
+        try:
+            return _train(args)
+        finally:
+            write_trace(args.trace_out, rec.events)
+            print(f"wrote trace: {args.trace_out} "
+                  f"({len(rec.events)} events)", flush=True)
+
+
+def _train(args) -> dict:
     cfg = get_config(args.arch, smoke=args.smoke)
     # keep params fp32 on CPU for small-scale training stability
     if jax.default_backend() == "cpu":
@@ -189,9 +211,10 @@ def train(argv=None) -> dict:
                     dev_batch["extra_embeds"] = jnp.zeros(ee.shape, ee.dtype)
                 extra = ((jax.random.PRNGKey(args.seed + 1 + step),)
                          if args.compress_grads else ())
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     dev_batch, *extra)
-                loss = float(metrics["loss"])
+                with obs.get().span("train.step", cat="train", step=step):
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         dev_batch, *extra)
+                    loss = float(metrics["loss"])
                 losses.append(loss)
                 if step % args.log_every == 0:
                     dt = time.time() - t0
@@ -216,4 +239,6 @@ def train(argv=None) -> dict:
 
 
 if __name__ == "__main__":
+    from repro.obs import log as _log
+    _log.configure()  # CLI runs show [info] progress; library use stays quiet
     train()

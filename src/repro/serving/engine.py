@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import make_serve_cb_step, sharded_argmax
+from repro.obs import recorder as obs
 from repro.models import model as MD
 from repro.models.config import ModelConfig
 from repro.serving.request import (FinishedRequest, Request,
@@ -136,7 +137,9 @@ class ServeProgram:
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int,
                  cache_len: int, chunk_cap: int = CHUNK_CAP,
-                 program: Optional[ServeProgram] = None):
+                 program: Optional[ServeProgram] = None,
+                 host: Any = "serve"):
+        self.host = host  # obs lane (fleet replicas pass their id)
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -167,6 +170,7 @@ class ServeEngine:
         self.eos_d = jnp.full((B,), -1, jnp.int32)
         # first token of each admitted request: device ref, harvested later
         self._pending_first: Dict[int, jax.Array] = {}
+        self._req_t0: Dict[int, float] = {}  # obs: rid -> admit clock
         self.ticks = 0
         self.decode_ticks = 0
         self.prefill_ticks = 0
@@ -191,6 +195,11 @@ class ServeEngine:
         self.pool.occupy(slot, req, start_pos, self.ticks)
         self._pending_first[slot] = first  # harvested with the next chunk
         self.prefill_ticks += 1
+        rec = obs.get()
+        if rec.enabled:
+            self._req_t0[req.rid] = rec.clock()
+            rec.event("serve.admit", host=self.host, cat="serving",
+                      rid=req.rid, slot=slot)
 
     # ------------------------------------------------------------------
     def _finish(self, slot: int, reason: str) -> None:
@@ -203,11 +212,23 @@ class ServeEngine:
             admitted_tick=int(self.pool.admitted_tick[slot]),
             finished_tick=self.ticks))
         self.pool.release(slot)
+        rec = obs.get()
+        if rec.enabled:
+            # the request lifecycle as one span: admit -> finish
+            t0 = self._req_t0.pop(req.rid, None)
+            if t0 is not None:
+                rec.complete("request", t0, rec.clock() - t0,
+                             host=self.host, cat="serving", rid=req.rid,
+                             reason=reason,
+                             tokens=len(self.finished[-1].tokens))
 
     def _consume(self, slot: int, tok: int) -> None:
         """Host mirror of the device retirement rule for one token."""
         req = self.pool.request[slot]
         self.pool.generated[slot].append(tok)
+        if len(self.pool.generated[slot]) == 1:
+            obs.get().event("serve.first_token", host=self.host,
+                            cat="serving", rid=req.rid)
         if req.eos_id is not None and tok == req.eos_id:
             self._finish(slot, "eos")
         elif len(self.pool.generated[slot]) >= req.max_new_tokens:
@@ -315,14 +336,23 @@ class ServeEngine:
         Queued-but-unadmitted requests come back untouched.  Ordered by
         request id so re-admission stays FIFO-fair in submission order.
         """
+        rec = obs.get()
         out = []
         for slot in np.flatnonzero(self.pool.active):
             slot = int(slot)
             out.append(DrainedRequest(self.pool.request[slot],
                                       list(self.pool.generated[slot])))
             self.pool.release(slot)
+            if rec.enabled:
+                rec.event("serve.drain", host=self.host, cat="serving",
+                          rid=out[-1].request.rid,
+                          emitted=len(out[-1].emitted))
+                self._req_t0.pop(out[-1].request.rid, None)
         while self.scheduler.queue:
             out.append(DrainedRequest(self.scheduler.queue.popleft(), []))
+            if rec.enabled:
+                rec.event("serve.drain", host=self.host, cat="serving",
+                          rid=out[-1].request.rid, emitted=0)
         self._pending_first = {}
         self.active_d = jnp.zeros((self.num_slots,), bool)
         return sorted(out, key=lambda d: d.request.rid)

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.cluster.coordinator import Coordinator
 from repro.cluster.sim import SimTransport
+from repro.obs import recorder as obs
 from repro.elastic.membership import ALIVE, FailureTrace
 from repro.elastic.recovery import ServingDrainReadmit
 from repro.serving.engine import CHUNK_CAP, ServeEngine, ServeProgram
@@ -118,6 +119,11 @@ class ServeFleet:
             raise
         self.finished: List[FinishedRequest] = []
         self.wall = 0
+        # obs: fleet time is the simulated wall tick, so recorded
+        # request lifecycles are trace-deterministic (like run_elastic)
+        rec = obs.get()
+        if rec.enabled:
+            rec.clock = lambda: float(self.wall)
         self.drains = 0
         self.preemptive_drains = 0
         self.submitted = 0
@@ -132,7 +138,7 @@ class ServeFleet:
         return Replica(rid, ServeEngine(
             self.params, self.cfg, num_slots=self.num_slots,
             cache_len=self.cache_len, chunk_cap=self.chunk_cap,
-            program=self.program))
+            program=self.program, host=rid))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -156,6 +162,8 @@ class ServeFleet:
         self.router.requeue_front(conts)
         self.router.forget(rid)
         self.drains += 1
+        obs.get().event("fleet.drain", host=rid, cat="serving",
+                        requeued=len(conts), wall=self.wall)
 
     # -- coordinator subscriptions -------------------------------------
     def _on_death(self, t) -> None:
@@ -182,6 +190,9 @@ class ServeFleet:
         if conts:
             self.router.requeue_front(conts)
             self.preemptive_drains += 1
+            obs.get().event("fleet.preemptive_drain", host=t.worker,
+                            cat="serving", requeued=len(conts),
+                            wall=self.wall)
 
     def _routable(self) -> Dict[int, Replica]:
         """Replicas the failure detector still trusts with NEW work: ALIVE
@@ -276,6 +287,13 @@ class ServeFleet:
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         toks = sum(len(f.tokens) for f in self.finished)
+        rec = obs.get()
+        if rec.enabled:
+            rec.gauge("serving.delivered_tokens", float(toks))
+            rec.gauge("serving.goodput", toks / max(self.wall, 1))
+            rec.gauge("serving.drains", float(self.drains))
+            rec.gauge("serving.preemptive_drains",
+                      float(self.preemptive_drains))
         return {
             "wall": self.wall,
             "delivered_tokens": toks,

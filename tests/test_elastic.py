@@ -267,7 +267,13 @@ def test_straggler_replan_reduces_step_time():
     alive = (0, 1, 2, 3)
     uniform, slow = replan_on_straggle(mon, alive, 64)
     assert slow == () and uniform == {w: 16 for w in alive}
+    # the EMA seeds from nominal, so one slow sample only blends part
+    # way down (0.625 at decay=0.5) — sustained slowness trips the
+    # threshold, a single hiccup does not
     mon.observe(2, 16, 64.0)                   # worker 2 at 1/4 speed
+    split, slow = replan_on_straggle(mon, alive, 64)
+    assert slow == ()
+    mon.observe(2, 16, 64.0)                   # still at 1/4 speed
     split, slow = replan_on_straggle(mon, alive, 64)
     assert slow == (2,)
     assert sum(split.values()) == 64           # exact global batch

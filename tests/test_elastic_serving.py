@@ -382,3 +382,22 @@ def test_shared_program_across_engines(params):
         assert f.tokens == ref[f.rid]
     with pytest.raises(ValueError, match="cache_len"):
         ServeEngine(params, cfg, num_slots=2, cache_len=16, program=prog)
+
+
+# ---------------------------------------------------------------------------
+# regression: the throughput EMA seeds from nominal, not the first sample
+# ---------------------------------------------------------------------------
+def test_monitor_first_observation_blends_from_nominal():
+    from repro.elastic.straggler import ThroughputMonitor
+    mon = ThroughputMonitor(decay=0.5)
+    # the first raw sample used to seed the EMA verbatim, so a single
+    # transient hiccup (or an oversized first credit chunk under banked
+    # credits) pinned the worker's rate at an outlier; it now blends
+    # from the nominal prior exactly like every later sample
+    mon.observe(0, 1, 4.0)                       # one sample at rate 0.25
+    assert mon.rates([0])[0] == pytest.approx(0.625)   # 0.5*1.0 + 0.5*0.25
+    mon.observe(0, 1, 4.0)                       # sustained slowness
+    assert mon.rates([0])[0] == pytest.approx(0.4375)  # converging on 0.25
+    # trace-reported rate transitions remain an authoritative pin
+    mon.set_rate(0, 0.25)
+    assert mon.rates([0])[0] == 0.25

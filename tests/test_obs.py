@@ -1,0 +1,246 @@
+"""Observability spine (repro.obs).
+
+Pins the three load-bearing guarantees:
+
+  * determinism — recording a simulated elastic run is a pure function
+    of the trace: two identical runs produce byte-identical trace.json,
+    and recording does not perturb the training trajectory;
+  * flight recorder — a worker process killed by an injected failure
+    flushes its bounded event ring to disk before exiting, and the
+    driver's merged trace carries the surviving hosts' rings;
+  * zero cost when disabled — with the default NullRecorder installed,
+    the elastic hot path allocates not a single Event (counting shim on
+    the one allocation point) and `span` returns one shared null
+    context manager.
+
+Tests named ``*_proc_*`` spawn real worker processes (the CI
+multihost-smoke job runs those under a timeout).
+"""
+import io
+import json
+import logging
+
+import pytest
+
+from repro.cluster import ProcTransport
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+from repro.obs import (Event, NullRecorder, Recorder, bench_report,
+                       chrome_trace, load_flight, log, recording,
+                       trace_json, write_trace)
+from repro.obs import recorder as obs_recorder
+
+
+# ---------------------------------------------------------------------------
+# recorder unit behavior
+# ---------------------------------------------------------------------------
+def test_span_records_complete_event_on_recorder_clock():
+    t = {"now": 10.0}
+    rec = Recorder(clock=lambda: t["now"])
+    with rec.span("work", host=3, cat="test", step=7):
+        t["now"] = 12.5
+    (ev,) = rec.events
+    assert (ev.name, ev.host, ev.ph, ev.cat) == ("work", 3, "X", "test")
+    assert ev.ts == 10.0 and ev.dur == 2.5
+    assert ev.args["step"] == 7
+
+
+def test_counters_and_gauges_aggregate_in_registry():
+    rec = Recorder()
+    rec.count("steps", 2)
+    rec.count("steps", 3)
+    rec.gauge("goodput", 1.5)
+    assert rec.metrics() == {"steps": 5.0, "goodput": 1.5}
+
+
+def test_event_round_trips_through_dict():
+    ev = Event(1.0, "driver", "X", "round", "elastic", dur=2.0,
+               args={"step": 3})
+    assert Event.from_dict(ev.as_dict()) == ev
+
+
+# ---------------------------------------------------------------------------
+# chrome trace writer
+# ---------------------------------------------------------------------------
+def test_chrome_trace_lanes_and_normalization():
+    evs = [Event(5.0, "driver", "i", "go", "c"),
+           Event(6.0, 1, "X", "rpc", "proc", dur=0.5),
+           Event(7.0, "ps0", "X", "push", "ps", dur=0.25)]
+    tr = chrome_trace(evs)["traceEvents"]
+    data = [e for e in tr if e["ph"] != "M"]
+    meta = [e for e in tr if e["ph"] == "M"]
+    # lane mapping: driver -> 0, worker w -> w+1, ps<s> -> 1000+s
+    tids = {e["name"]: e["tid"] for e in data}
+    assert tids == {"go": 0, "rpc": 2, "push": 1000}
+    # timestamps are min-normalized (first event at 0), in microseconds
+    assert min(e["ts"] for e in data) == 0
+    assert {m["args"]["name"] for m in meta if m["name"] == "thread_name"} \
+        == {"driver", "host 1", "ps0"}
+
+
+def test_trace_json_is_stable_bytes():
+    evs = [Event(1.0, "driver", "i", "a", "c"),
+           Event(2.0, 0, "X", "b", "c", dur=1.0)]
+    assert trace_json(evs) == trace_json(list(evs))
+
+
+# ---------------------------------------------------------------------------
+# determinism: recording a simulated run is a pure function of the trace
+# ---------------------------------------------------------------------------
+def _recorded_sync_run(ckpt_dir):
+    trace = FailureTrace.single_failure(8, 1)
+    with recording(Recorder()) as rec:
+        res = run_elastic(ElasticProblem(), mode="sync", workers=4,
+                          steps=20, global_batch=16, trace=trace,
+                          ckpt_dir=str(ckpt_dir), ckpt_every=5)
+    return res, rec
+
+
+def test_sim_trace_json_byte_identical_across_runs(tmp_path):
+    _, rec_a = _recorded_sync_run(tmp_path / "a")
+    _, rec_b = _recorded_sync_run(tmp_path / "b")
+    a, b = trace_json(rec_a.events), trace_json(rec_b.events)
+    assert a == b
+    names = {e.name for e in rec_a.events}
+    # the spine covers cluster, elastic, and recovery layers
+    assert {"round", "epoch", "membership.death", "recovery",
+            "restore"} <= names
+    assert len(rec_a.events) > 20
+
+
+def test_recording_does_not_perturb_the_trajectory(tmp_path):
+    rec_res, rec = _recorded_sync_run(tmp_path / "rec")
+    trace = FailureTrace.single_failure(8, 1)
+    off_res = run_elastic(ElasticProblem(), mode="sync", workers=4,
+                          steps=20, global_batch=16, trace=trace,
+                          ckpt_dir=str(tmp_path / "off"), ckpt_every=5)
+    assert rec_res.losses == off_res.losses
+    assert rec_res.goodput == off_res.goodput
+    assert rec.metrics()["elastic.goodput"] == pytest.approx(
+        off_res.goodput)
+
+
+# ---------------------------------------------------------------------------
+# zero cost when disabled
+# ---------------------------------------------------------------------------
+def test_disabled_hot_path_allocates_zero_events(monkeypatch):
+    assert isinstance(obs_recorder.get(), NullRecorder)
+    made = []
+    real_event = obs_recorder.Event
+
+    def counting_event(*a, **k):
+        made.append((a, k))
+        return real_event(*a, **k)
+
+    # Event construction is the single allocation point of the spine
+    # (every producer funnels through it) — shim it and drive the full
+    # elastic hot path with the default NullRecorder installed
+    monkeypatch.setattr(obs_recorder, "Event", counting_event)
+    run_elastic(ElasticProblem(), mode="local_sgd", workers=2, steps=10,
+                global_batch=8)
+    assert made == []
+
+
+def test_null_span_is_shared_not_allocated():
+    null = NullRecorder()
+    assert null.span("a") is null.span("b", host=1, cat="x")
+    assert null.enabled is False
+
+
+# ---------------------------------------------------------------------------
+# flight recorder under real worker processes
+# ---------------------------------------------------------------------------
+def test_proc_kill_flushes_flight_and_trace_merges_hosts(tmp_path):
+    """The acceptance scenario: an elastic run on the proc transport
+    with one injected kill yields (a) a flight dump from the killed
+    host, (b) a merged trace spanning the coordinator and the surviving
+    hosts' rings, (c) the dead host's ring liftable into the same
+    trace from its dump."""
+    trace = FailureTrace([TraceEvent(5, "fail", 1)])
+    flight_dir = tmp_path / "flight"
+    flight_dir.mkdir()
+    with recording(Recorder()) as rec:
+        res = run_elastic(
+            ElasticProblem(), mode="local_sgd", workers=3, steps=12,
+            global_batch=24,
+            transport=ProcTransport(inject=trace,
+                                    flight_dir=str(flight_dir)))
+    assert res.final_alive == (0, 2)
+
+    # (a) the killed worker flushed its ring on the way down
+    dump = flight_dir / "flight_host1.json"
+    assert dump.exists()
+    payload = json.loads(dump.read_text())
+    assert payload["host"] == 1
+    assert payload["reason"] == "die"
+    names = [e["name"] for e in payload["events"]]
+    assert "cmd.die" in names
+
+    # (b) the driver's trace holds coordinator events AND the surviving
+    # workers' pulled rings
+    assert any(e.name == "membership.death" for e in rec.events)
+    flight_hosts = {e.host for e in rec.events if e.cat == "flight"}
+    assert {0, 2} <= flight_hosts
+
+    # (c) the dump lifts into the same event model and the whole thing
+    # serializes as one Perfetto trace with a lane per host
+    rec.merge(load_flight(dump))
+    out = tmp_path / "trace.json"
+    write_trace(out, rec.events)
+    tr = json.loads(out.read_text())["traceEvents"]
+    tids = {e["tid"] for e in tr if "tid" in e}
+    assert {0, 1, 2, 3} <= tids        # driver + hosts 0..2
+
+
+def test_proc_live_workers_answer_obs_pull():
+    transport = ProcTransport()
+    try:
+        transport.start(2)
+        evs = transport.host_events()
+    finally:
+        transport.close()
+    assert {e.host for e in evs} == {0, 1}
+    assert all(e.cat == "flight" for e in evs)
+    # per-host event order is exact (worker-relative stamps, shifted by
+    # the observed spawn time)
+    for h in (0, 1):
+        ts = [e.ts for e in evs if e.host == h]
+        assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# logger gating
+# ---------------------------------------------------------------------------
+def test_log_quiet_by_default_and_gated_after_configure():
+    logger = log.get_logger()
+    assert not logger.isEnabledFor(logging.INFO)   # quiet default
+    buf = io.StringIO()
+    try:
+        log.configure("info", stream=buf)
+        log.info("hello %d", 7)
+        assert "hello 7" in buf.getvalue()
+        n_handlers = len(logger.handlers)
+        log.configure("warning")                   # idempotent attach
+        assert len(logger.handlers) == n_handlers
+        before = buf.getvalue()
+        log.info("dropped")
+        assert buf.getvalue() == before
+    finally:
+        # undo the global handler so later tests stay quiet
+        logger.handlers = [h for h in logger.handlers
+                           if not isinstance(h, logging.StreamHandler)
+                           or isinstance(h, logging.NullHandler)]
+        logger.setLevel(logging.WARNING)
+        log._configured = False
+
+
+# ---------------------------------------------------------------------------
+# metrics registry as the bench surface
+# ---------------------------------------------------------------------------
+def test_bench_report_round_trips_through_registry(tmp_path):
+    report = {"workers": 4, "modes": {"sync": {"free": {"goodput": 8.0},
+                                               "fail1": {"ratio": 0.84}}},
+              "note": "x"}
+    out = bench_report("unit", report, tmp_path)
+    assert out == tmp_path / "unit.json"
+    assert json.loads(out.read_text()) == report
