@@ -1,19 +1,38 @@
-"""Paper Table 4 (distributed DRL): final return, rounds and learner
-throughput for GORILA / Ape-X / A3C / IMPALA / DPPO on the chain env,
-plus the V-trace-vs-staleness ablation (IMPALA's claim)."""
+"""Paper Table 4 (distributed DRL) + the actor–learner fleet section.
+
+Table 4: final return, rounds and learner throughput for GORILA / Ape-X /
+A3C / IMPALA / DPPO on the chain env (the vectorized `repro.rl.agents`
+rounds), plus the V-trace-vs-staleness ablation (IMPALA's claim).
+
+Fleet (`repro.rl.fleet` on the cluster control plane, simulated clock —
+all numbers deterministic): actor-scaling throughput, and goodput under
+one injected actor kill — the Ape-X/IMPALA degradation claim (an actor
+death costs ONLY its future rollouts; the learner never stalls).
+Results land in benchmarks/results/rl.json; check_regression.py gates
+the fleet metrics against benchmarks/baselines/rl.json.
+
+  PYTHONPATH=src python benchmarks/bench_rl.py [--quick]
+
+--quick (CI bench-smoke) runs the fleet section only, at smoke sizes.
+"""
 from __future__ import annotations
 
+import argparse
+import pathlib
 import time
 
 import jax
 import numpy as np
 
+from repro.obs import bench_report
 from repro.rl import agents as AG
 from repro.rl.env import ChainEnv, episode_return
+from repro.rl.fleet import run_fleet
 
 ENV = ChainEnv(length=8, horizon=24)
 KEY = jax.random.PRNGKey(0)
 ACTORS = 4
+RESULTS = pathlib.Path(__file__).parent / "results"
 
 
 def _ret(params, policy_fn):
@@ -21,7 +40,10 @@ def _ret(params, policy_fn):
                                 jax.random.PRNGKey(99)))
 
 
-def main(argv=None) -> list:
+# ---------------------------------------------------------------------------
+# Table 4: vectorized architecture rounds
+# ---------------------------------------------------------------------------
+def table4() -> dict:
     rows = []
 
     def bench(name, run):
@@ -31,7 +53,7 @@ def main(argv=None) -> list:
         env_steps = rounds * steps_per_round * ACTORS
         rows.append((name, ret, rounds, env_steps / dt, dt))
 
-    def gorila(prioritized, rounds=300, seed=5 if True else 0):
+    def gorila(prioritized, rounds=300):
         def run():
             state = AG.q_init(ENV, KEY, actors=ACTORS)
             key = jax.random.PRNGKey(5 if prioritized else 0)
@@ -85,9 +107,80 @@ def main(argv=None) -> list:
     bench("dppo", dppo)
 
     print("name,final_return,rounds,env_steps_per_s,wall_s")
+    out = {}
     for r in rows:
         print(f"{r[0]},{r[1]:.3f},{r[2]},{r[3]:.0f},{r[4]:.1f}")
-    return rows
+        out[r[0]] = {"final_return": r[1], "rounds": r[2],
+                     "env_steps_per_s": r[3], "wall_s": r[4]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fleet: actor scaling + churn goodput on the control plane
+# ---------------------------------------------------------------------------
+def fleet_section(quick: bool) -> dict:
+    from repro.elastic import FailureTrace
+
+    kw = dict(replay_shards=2, rollout_len=8, batch=8, capacity=256,
+              pull_every=4, evaluate=False,
+              steps=20 if quick else 40)
+    kill_at = kw["steps"] // 2
+
+    print("\nfleet,scenario,actors,goodput,goodput_ratio,learner_steps,"
+          "staleness_mean,wall_s")
+    report: dict = {"scaling": {}}
+
+    # -- actor scaling: goodput must track the actor count exactly
+    # (simulated time; each live actor contributes rollout_len per round)
+    for a in (2, 4, 8):
+        t0 = time.time()
+        res = run_fleet(actors=a, **kw)
+        dt = time.time() - t0
+        report["scaling"][f"a{a}"] = {
+            "goodput": res.goodput, "learner_steps": res.learner_steps,
+            "staleness_mean": res.staleness_mean, "wall_s": dt}
+        print(f"fleet,scale,{a},{res.goodput:.2f},1.000,"
+              f"{res.learner_steps},{res.staleness_mean:.2f},{dt:.1f}")
+    speedup = (report["scaling"]["a8"]["goodput"]
+               / report["scaling"]["a2"]["goodput"])
+    report["scaling"]["speedup_8x2"] = speedup
+
+    # -- one injected actor kill: lost throughput only, learner unharmed
+    free = run_fleet(actors=4, **kw)
+    t0 = time.time()
+    fail = run_fleet(actors=4,
+                     trace=FailureTrace.single_failure(kill_at, 1), **kw)
+    dt = time.time() - t0
+    ratio = fail.goodput / free.goodput
+    report["free"] = {"goodput": free.goodput,
+                      "learner_steps": free.learner_steps}
+    report["fail1"] = {
+        "goodput": fail.goodput, "goodput_ratio": ratio,
+        "learner_steps": fail.learner_steps,
+        "staleness_mean": fail.staleness_mean, "wall_s": dt}
+    print(f"fleet,fail1,4,{fail.goodput:.2f},{ratio:.3f},"
+          f"{fail.learner_steps},{fail.staleness_mean:.2f},{dt:.1f}")
+
+    # the acceptance claims, hard-asserted so the bench itself is a gate
+    assert ratio >= 0.8, f"actor-kill goodput ratio {ratio:.3f} < 0.8"
+    assert fail.learner_steps == free.learner_steps, \
+        "learner stalled on a dead actor"
+    assert speedup == 4.0, f"scaling not linear: 8/2 speedup {speedup}"
+    return report
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI bench-smoke: fleet section only, smoke sizes")
+    args = ap.parse_args(argv)
+
+    report: dict = {"fleet": fleet_section(args.quick)}
+    if not args.quick:
+        report["table4"] = table4()
+    out = bench_report("rl", report, RESULTS)
+    print(f"wrote {out}")
+    return report
 
 
 if __name__ == "__main__":

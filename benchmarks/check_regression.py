@@ -68,6 +68,16 @@ GATES = {
         # i.e. async steals < 20% of what a blocking save costs)
         ("async.savings_frac", DEFAULT_MIN_RATIO),
     ],
+    "rl": [
+        # the actor–learner fleet on the simulated clock: all three are
+        # deterministic, so any drift is a real behavior change.  fail1
+        # ratio is the Ape-X/IMPALA degradation claim (one actor kill
+        # costs only its future rollouts); the scaling speedup pins
+        # goodput linear in live actors (8 vs 2)
+        ("fleet.fail1.goodput_ratio", DEFAULT_MIN_RATIO),
+        ("fleet.free.goodput", DEFAULT_MIN_RATIO),
+        ("fleet.scaling.speedup_8x2", DEFAULT_MIN_RATIO),
+    ],
     "multihost": [
         # 1 - (ProcTransport poll seconds / wall): 0.97 is deliberately
         # TIGHTER than the bench's own poll_frac < 5% assert (headroom

@@ -15,6 +15,11 @@ Where to go next:
     under the same trace machinery, zero dropped requests):
     `examples/elastic_serve.py`, or the launcher
     `python -m repro.launch.serve --replicas 3 --failure-trace=trace.json`
+  * distributed RL — the Ape-X/IMPALA actor–learner fleet on the same
+    cluster control plane (actors + sharded prioritized replay + learner;
+    actor death = lost throughput only): `examples/distributed_rl.py`,
+    or the launcher `python -m repro.launch.rl --actors 4 --transport
+    proc` (see `repro.rl`)
 """
 import jax
 import jax.numpy as jnp

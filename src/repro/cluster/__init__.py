@@ -27,6 +27,18 @@ Architecture (the survey's coordination layer, made a subsystem):
   crashes/silence, and captures everything it observed back into the
   same `FailureTrace` JSON — so a live incident replays
   deterministically under sim.
+* **Role registry** (`roles.py`) — hosts can serve stateful roles
+  (parameter-server shard, replay shard, RL learner, ...) registered
+  as verb->handler tables that speak the JSON-safe wire format on
+  BOTH transports: sim dispatches in-process under role-named spans,
+  proc dispatches inside worker children over the heartbeat pipe —
+  identical handler, identical bytes, so role traffic is bit-identical
+  by construction.  `Transport.role_open`/`role_call` is the client
+  surface (`ps_*` are now thin compat wrappers); a host death during
+  an RPC raises `RoleHostDied` and the CLIENT decides fatality (a PS
+  or learner holds the only copy of its state; a replay shard
+  degrades to survivors).  Out-of-tree roles reach proc children via
+  `ProcTransport(role_modules=[...])`.
 
 The cross-transport contract (pinned by `tests/test_cluster.py` and
 gated by `benchmarks/bench_multihost.py`): the same trace driven through

@@ -52,7 +52,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.cluster.transport import Transport
+from repro.cluster import roles
+from repro.cluster.transport import RoleHostDied, Transport
 from repro.obs import recorder as obs
 from repro.obs.flight import FlightRecorder
 
@@ -63,34 +64,23 @@ from repro.obs.flight import FlightRecorder
 def _worker_entry(argv: Optional[List[str]] = None) -> None:
     """Heartbeat + command loop of one worker process.
 
-    Commands (one JSON object per line on stdin, verb under "v"):
+    Commands are one JSON object per line on stdin, verb under "v".
+    Two verbs are loop control flow:
       {"v": "die"}            simulate a hard crash: exit, no ack
-      {"v": "hang"}           stop heartbeating (the process stays alive
-                              and keeps reading commands — a wedged data
-                              plane with a live control socket)
-      {"v": "recover"}        resume heartbeating at nominal rate
-      {"v": "slow", "rate": r}    self-report relative throughput r
-      {"v": "commit", "step": s}  step this host last committed a
-                                  checkpoint at (piggybacks on beats)
-      {"v": "ps_open", "lr": ..., "momentum": ..., "entries": ...}
-                              activate the ParamServer role: this member
-                              now also serves a versioned KV shard
-                              (`core.param_server.PSShard`; numpy is
-                              imported lazily here, never at module
-                              scope, so plain workers stay stdlib-only)
-      {"v": "ps_push", "worker": w, "clock": c, "grads": ...}
-                              apply a gradient push; ack carries the
-                              new shard version
-      {"v": "ps_pull"}        ack carries (version, entries)
-      {"v": "obs_pull"}       ack carries the flight-recorder ring (the
-                              worker's last N events, worker-relative
-                              timestamps) for merging into a trace
       {"v": "stop"}           clean shutdown (flushes the flight ring)
+    Everything else routes through the role/verb registry
+    (`cluster.roles.dispatch`) — the same handlers SimTransport runs
+    in-process.  The built-in "member" role covers the base heartbeat
+    duties (hang / recover / slow / commit / obs_pull); server roles
+    (ps_* / replay_* / learner_*) come up on their open verb, which is
+    when numpy gets imported — never at module scope, so plain workers
+    stay stdlib-only.
+
     Every command except die/stop is acknowledged on stdout so an
     injecting transport can emit the event at a deterministic wall step
-    (ps_* acks double as RPC replies).  Array payloads ride as base64
+    (role acks double as RPC replies).  Array payloads ride as base64
     float32 (`param_server.encode_entries`) — an exact round-trip, so
-    proc-transport PS training is bit-identical to sim.
+    proc-transport role traffic is bit-identical to sim.
     All pre-hang beats precede the hang ack in pipe order (single
     writer), so after the ack the worker is provably silent."""
     import argparse
@@ -100,11 +90,19 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--wid", type=int, required=True)
     ap.add_argument("--heartbeat-every", type=float, default=0.005)
     ap.add_argument("--flight-dir", default=None)
+    ap.add_argument("--roles", default=None,
+                    help="comma-separated modules imported before the "
+                         "loop so out-of-tree roles register in this "
+                         "child (built-ins come with cluster.roles)")
     args = ap.parse_args(argv)
+    if args.roles:
+        import importlib
+        for mod in args.roles.split(","):
+            if mod:
+                importlib.import_module(mod)
 
     out = sys.stdout
-    rate, committed, hung, seq = 1.0, None, False, 0
-    ps = None                       # PSShard once ps_open arrives
+    seq = 0
     buf = b""
     # flight recorder: a bounded ring of this worker's recent events,
     # flushed to disk on die/stop/SIGTERM so the post-mortem of a killed
@@ -112,6 +110,10 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
     flight = FlightRecorder(args.wid)
     if args.flight_dir:
         flight.install_sigterm(args.flight_dir)
+    # this host's role states; "member" (liveness knobs + flight ring)
+    # exists from birth, server roles appear on their open verbs
+    member = roles.MemberState(args.wid, flight)
+    states: Dict[str, Any] = {"member": member}
 
     def _flush_flight(reason: str) -> None:
         if args.flight_dir:
@@ -135,7 +137,6 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                     continue
                 cmd = json.loads(line)
                 verb = cmd["v"]
-                reply: Dict[str, Any] = {}
                 flight.note("cmd." + verb,
                             **{k: v for k, v in cmd.items()
                                if k != "v" and isinstance(v, (int, float,
@@ -146,38 +147,14 @@ def _worker_entry(argv: Optional[List[str]] = None) -> None:
                 elif verb == "stop":
                     _flush_flight("stop")
                     return
-                elif verb == "obs_pull":
-                    reply["events"] = flight.snapshot()
-                elif verb == "hang":
-                    hung = True
-                elif verb == "recover":
-                    hung, rate = False, 1.0
-                elif verb == "slow":
-                    rate = float(cmd["rate"])
-                elif verb == "commit":
-                    committed = int(cmd["step"])
-                elif verb == "ps_open":
-                    from repro.core.param_server import (PSShard,
-                                                         decode_entries)
-                    ps = PSShard(cmd["lr"],
-                                 momentum=cmd.get("momentum", 0.0))
-                    ps.init(decode_entries(cmd["entries"]))
-                elif verb == "ps_push":
-                    from repro.core.param_server import decode_entries
-                    reply["version"] = ps.push(cmd["worker"], cmd["clock"],
-                                               decode_entries(cmd["grads"]))
-                elif verb == "ps_pull":
-                    from repro.core.param_server import encode_entries
-                    version, entries = ps.pull()
-                    reply["version"] = version
-                    reply["entries"] = encode_entries(entries)
+                reply = roles.dispatch(states, cmd)
                 emit({"t": "ack", "verb": verb, **reply})
-        if not hung:
+        if not member.hung:
             seq += 1
             if seq == 1 or seq % 64 == 0:   # beat context, ring-friendly
-                flight.note("beat", seq=seq, rate=rate)
-            emit({"t": "beat", "seq": seq, "rate": rate,
-                  "committed": committed})
+                flight.note("beat", seq=seq, rate=member.rate)
+            emit({"t": "beat", "seq": seq, "rate": member.rate,
+                  "committed": member.committed})
 
 
 def _reader(wid: int, stream, msg_q) -> None:
@@ -213,7 +190,8 @@ class _Handle:
 class ProcTransport(Transport):
     def __init__(self, *, inject=None, heartbeat_every: float = 0.05,
                  silence_after: float = 30.0, ack_timeout: float = 60.0,
-                 flight_dir: Optional[str] = None):
+                 flight_dir: Optional[str] = None,
+                 role_modules: Optional[List[str]] = None):
         """inject: optional FailureTrace to actuate against the real
         processes (None = purely observational).  heartbeat_every: the
         workers' beat period — only the real-time granularity of organic
@@ -226,9 +204,13 @@ class ProcTransport(Transport):
         proportionally smaller heartbeat_every) to exercise the organic
         silence path.  flight_dir: directory worker children flush
         their flight-recorder rings to on die/stop/SIGTERM (None =
-        flight recording off)."""
+        flight recording off).  role_modules: extra modules each worker
+        child imports at startup so out-of-tree `cluster.roles`
+        registrations exist on both ends of the pipe (built-in roles
+        need no listing)."""
         self._inject = inject
         self.flight_dir = flight_dir
+        self.role_modules = list(role_modules or [])
         self.heartbeat_every = heartbeat_every
         self.silence_after = silence_after
         self.ack_timeout = ack_timeout
@@ -261,6 +243,8 @@ class ProcTransport(Transport):
                 "--heartbeat-every", str(self.heartbeat_every)]
         if self.flight_dir:
             argv += ["--flight-dir", str(self.flight_dir)]
+        if self.role_modules:
+            argv += ["--roles", ",".join(self.role_modules)]
         p = subprocess.Popen(
             argv, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
             env=env, text=False)
@@ -523,35 +507,33 @@ class ProcTransport(Transport):
         self._send(h, {"v": "commit", "step": step})
         self._await_ack(wid, "commit")
 
-    # -- ParamServer role ---------------------------------------------
-    def _ps_rpc(self, ps_id: int, msg: Dict) -> Dict:
-        """Command round-trip to a PS member.  A PS that dies mid-RPC is
-        fatal for the requester: unlike a worker death (lost throughput),
-        a centralized shard holds the only copy of its parameters."""
-        h = self._workers[ps_id]
+    # -- roles ---------------------------------------------------------
+    def _role_rpc(self, host: int, msg: Dict) -> Dict:
+        """Command round-trip to a role host over its heartbeat pipe.
+        `RoleHostDied` if the host's pipe hit EOF mid-RPC — the CLIENT
+        decides whether that is fatal (PS/learner: the only copy of the
+        state) or a degradation (replay: sample from survivors)."""
+        h = self._workers[host]
         self._send(h, msg)
-        reply = self._await_reply(ps_id, msg["v"])
+        reply = self._await_reply(host, msg["v"])
         if reply is None:
-            raise RuntimeError(
-                f"parameter server {ps_id} died during {msg['v']}")
-        return reply
+            raise RoleHostDied(host, msg["v"])
+        if "err" in reply:
+            raise KeyError(f"host {host}: {reply['err']}")
+        # strip the ack envelope: clients see the handler's reply dict
+        # verbatim, exactly as SimTransport returns it
+        return {k: v for k, v in reply.items() if k not in ("t", "verb")}
 
-    def ps_open(self, ps_id: int, lr: float, entries, momentum=0.0) -> None:
-        from repro.core.param_server import encode_entries
-        self._ps_rpc(ps_id, {"v": "ps_open", "lr": lr, "momentum": momentum,
-                             "entries": encode_entries(entries)})
+    def role_open(self, host: int, role: str, **kwargs) -> None:
+        spec = roles.get(role)
+        if spec.open_verb is None:
+            raise ValueError(f"role {role!r} has no open verb")
+        self._role_rpc(host, {"v": spec.open_verb, **kwargs})
 
-    def ps_push(self, ps_id: int, worker: int, clock: int, grads) -> int:
-        from repro.core.param_server import encode_entries
-        reply = self._ps_rpc(ps_id, {"v": "ps_push", "worker": worker,
-                                     "clock": clock,
-                                     "grads": encode_entries(grads)})
-        return reply["version"]
-
-    def ps_pull(self, ps_id: int):
-        from repro.core.param_server import decode_entries
-        reply = self._ps_rpc(ps_id, {"v": "ps_pull"})
-        return reply["version"], decode_entries(reply["entries"])
+    def role_call(self, host: int, verb: str, payload=None):
+        if roles.lookup(verb) is None:
+            raise ValueError(f"unknown role verb {verb!r}")
+        return self._role_rpc(host, {"v": verb, **(payload or {})})
 
     # -- observability -------------------------------------------------
     def host_events(self) -> List[Any]:

@@ -30,7 +30,20 @@ must not pay (or depend on) the jax import.
 from __future__ import annotations
 
 import abc
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class RoleHostDied(RuntimeError):
+    """A host died mid-role-RPC.  Whether that is fatal is the CLIENT's
+    call: a parameter server or learner holds the only copy of its state
+    (requesters must raise), while a replay shard's loss just degrades
+    sampling to the surviving shards (requesters drop it and move on)."""
+
+    def __init__(self, host: int, verb: str):
+        super().__init__(f"role host {host} died during {verb!r} "
+                         f"(its role state is gone)")
+        self.host = host
+        self.verb = verb
 
 
 class Transport(abc.ABC):
@@ -67,30 +80,52 @@ class Transport(abc.ABC):
         `FailureTrace` (the trace-capture path: live incident ->
         deterministic SimTransport test case)."""
 
-    # -- ParamServer role ---------------------------------------------
-    # A parameter server is just a member host (the coordinator tracks
-    # its liveness like any worker) that additionally serves a versioned
-    # key-value shard (`core.param_server.PSShard`).  Entries/grads are
-    # plain {key: float32 ndarray} dicts; transports that support the
-    # role must make push/pull byte-exact across the wire so sim and
-    # proc training stay bit-identical.
+    # -- roles ---------------------------------------------------------
+    # A role host is just a member (the coordinator tracks its liveness
+    # like any worker) that additionally serves registered verbs — a
+    # parameter-server shard, a replay shard, a learner's published
+    # params (`cluster.roles`).  Payloads/replies are line-JSON-safe
+    # dicts with arrays pre-encoded via the exact float32 wire codec
+    # (`core.param_server.encode_entries`), so the identical handler
+    # bytes flow whether the role runs in-process (sim) or behind a
+    # worker pipe (proc) — that is what keeps sim and proc bit-identical.
+    def role_open(self, host: int, role: str, **kwargs: Any) -> None:
+        """Activate a registered role on member `host`, building its
+        server-side state from `kwargs` (the open command's payload)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot host roles")
+
+    def role_call(self, host: int, verb: str,
+                  payload: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+        """One role-verb round-trip to `host`; returns the handler's
+        reply.  Raises `RoleHostDied` if the host died mid-call."""
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot host roles")
+
+    # -- ParamServer role (compatibility wrappers over the registry) ---
     def ps_open(self, ps_id: int, lr: float, entries: Dict[str, Any],
                 momentum: float = 0.0) -> None:
         """Activate the ParamServer role on member `ps_id`, seeding its
         shard with `entries` and the server-side SGD step size."""
-        raise NotImplementedError(
-            f"{type(self).__name__} has no ParamServer role")
+        from repro.core.param_server import encode_entries
+        self.role_open(ps_id, "ps", lr=lr, momentum=momentum,
+                       entries=encode_entries(entries))
 
     def ps_push(self, ps_id: int, worker: int, clock: int,
                 grads: Dict[str, Any]) -> int:
-        """Apply a worker's gradient push; returns the shard version."""
-        raise NotImplementedError(
-            f"{type(self).__name__} has no ParamServer role")
+        """Apply a worker's gradient push; returns the shard version.
+        A PS death mid-push is fatal: the shard held the only copy."""
+        from repro.core.param_server import encode_entries
+        return self.role_call(ps_id, "ps_push",
+                              {"worker": worker, "clock": clock,
+                               "grads": encode_entries(grads)})["version"]
 
     def ps_pull(self, ps_id: int) -> Tuple[int, Dict[str, Any]]:
         """Fetch (version, entries) from the shard."""
-        raise NotImplementedError(
-            f"{type(self).__name__} has no ParamServer role")
+        from repro.core.param_server import decode_entries
+        reply = self.role_call(ps_id, "ps_pull")
+        return reply["version"], decode_entries(reply["entries"])
 
     def close(self) -> None:
         """Tear down workers/queues (idempotent)."""

@@ -349,15 +349,9 @@ def _make_lm_coordinator(args, trace: FailureTrace, num_hosts: int):
     simulated clock; proc runs real worker processes with the trace
     injected against them (same transitions, real heartbeats)."""
     from repro.cluster.coordinator import Coordinator
-    from repro.cluster.sim import SimTransport
+    from repro.launch.cli import make_transport
 
-    if getattr(args, "transport", "sim") == "proc":
-        from repro.cluster.proc import ProcTransport
-        return Coordinator(
-            ProcTransport(inject=trace,
-                          flight_dir=getattr(args, "flight_dir", None)),
-            num_hosts)
-    return Coordinator(SimTransport(trace), num_hosts)
+    return Coordinator(make_transport(args, trace), num_hosts)
 
 
 def elastic_lm_loop(*, args, cfg, step_fn, params, opt_state, bshard,

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import sharding as SH
+from repro.launch import cli
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import sharded_argmax
 from repro.models import model as MD
@@ -155,16 +156,11 @@ def _make_stream(cfg, args):
 
 
 def _serve_fleet(params, cfg, args):
-    from repro.elastic import FailureTrace
     from repro.serving import ServeFleet
 
-    trace = (FailureTrace.load(args.failure_trace)
-             if args.failure_trace else None)
-    transport = None
-    if args.transport == "proc":
-        from repro.cluster import ProcTransport
-        transport = ProcTransport(inject=trace,
-                                  flight_dir=args.flight_dir)
+    trace = cli.load_failure_trace(args)
+    transport = (cli.make_transport(args, trace)
+                 if args.transport == "proc" else None)
     n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
     fleet = ServeFleet(params, cfg, replicas=args.replicas,
                        num_slots=args.batch,
@@ -207,41 +203,16 @@ def serve(argv=None) -> dict:
                     help="elastic fleet of N continuous-batching replicas "
                          "(repro.serving.ServeFleet); --batch = slots per "
                          "replica")
-    ap.add_argument("--failure-trace", default=None,
-                    help="--replicas: FailureTrace JSON to replay "
-                         "(fail/hang/recover/join/slow events against "
-                         "replica ids)")
-    ap.add_argument("--transport", default="sim", choices=["sim", "proc"],
-                    help="--replicas control plane: 'sim' replays the "
-                         "trace on the simulated clock; 'proc' backs "
-                         "each replica with a real heartbeat process "
-                         "(repro.cluster.ProcTransport) and injects the "
-                         "trace against them")
     ap.add_argument("--requests", type=int, default=16,
                     help="--continuous/--replicas: requests in the stream")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--trace-out", default=None,
-                    help="record the run and write a Chrome/Perfetto "
-                         "trace.json here (open in ui.perfetto.dev); "
-                         "see repro.obs")
-    ap.add_argument("--flight-dir", default=None,
-                    help="--transport=proc: directory where dying/"
-                         "stopped replicas flush their flight-recorder "
-                         "ring (flight_host<id>.json)")
+    cli.add_cluster_args(ap, context="--replicas")
+    cli.add_trace_args(ap)
     args = ap.parse_args(argv)
 
-    if not args.trace_out:
-        return _serve(args)
-    from repro.obs.trace import write_trace
-    with obs.recording(obs.Recorder()) as rec:
-        try:
-            return _serve(args)
-        finally:
-            write_trace(args.trace_out, rec.events)
-            print(f"wrote trace: {args.trace_out} "
-                  f"({len(rec.events)} events)", flush=True)
+    return cli.run_traced(args, lambda: _serve(args))
 
 
 def _serve(args) -> dict:

@@ -31,6 +31,7 @@ from repro.checkpoint import (AsyncCheckpointer, latest_step,
 from repro.configs import get_config
 from repro.core import sharding as SH
 from repro.data import make_pipeline
+from repro.launch import cli
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import batch_pspecs, batch_abstract, make_train_step
 from repro.models import model as MD
@@ -67,11 +68,10 @@ def train(argv=None) -> dict:
     ap.add_argument("--elastic", action="store_true",
                     help="elastic training: survive worker death/join/"
                          "slowdown from a failure trace (repro.elastic)")
-    ap.add_argument("--failure-trace", default=None,
-                    help="JSON trace of fail/hang/join/slow events "
-                         "(repro.elastic.membership.FailureTrace)")
-    ap.add_argument("--workers", type=int, default=4,
-                    help="logical data-parallel workers for --elastic")
+    cli.add_cluster_args(ap, context="--elastic", workers=4,
+                         workers_help="logical data-parallel workers "
+                                      "for --elastic")
+    cli.add_trace_args(ap)
     ap.add_argument("--mode", default="sync",
                     choices=["sync", "local_sgd", "easgd", "async_ps",
                              "ssp"],
@@ -84,12 +84,6 @@ def train(argv=None) -> dict:
     ap.add_argument("--staleness", type=int, default=2,
                     help="--mode=ssp staleness bound s: a worker may run "
                          "at most s clocks ahead of the slowest")
-    ap.add_argument("--transport", default="sim", choices=["sim", "proc"],
-                    help="--elastic control plane: 'sim' replays the "
-                         "failure trace on the simulated clock; 'proc' "
-                         "runs real worker processes with per-host "
-                         "heartbeat RPC and injects the trace against "
-                         "them (repro.cluster.ProcTransport)")
     ap.add_argument("--keep-last", type=int, default=3,
                     help="checkpoint retention for --elastic")
     ap.add_argument("--async-ckpt", dest="async_ckpt", action="store_true",
@@ -99,14 +93,6 @@ def train(argv=None) -> dict:
                          "default: on for --elastic, off otherwise")
     ap.add_argument("--no-async-ckpt", dest="async_ckpt",
                     action="store_false")
-    ap.add_argument("--trace-out", default=None,
-                    help="record the run and write a Chrome/Perfetto "
-                         "trace.json here (open in ui.perfetto.dev); "
-                         "see repro.obs")
-    ap.add_argument("--flight-dir", default=None,
-                    help="--transport=proc: directory where dying/"
-                         "stopped workers flush their flight-recorder "
-                         "ring (flight_host<id>.json)")
     args = ap.parse_args(argv)
     if args.elastic and args.mode == "sync" and not args.ckpt_dir:
         ap.error("--elastic --mode=sync requires --ckpt-dir (sync "
@@ -117,16 +103,7 @@ def train(argv=None) -> dict:
         # steals a full step from every worker, so async is the default
         args.async_ckpt = args.elastic
 
-    if not args.trace_out:
-        return _train(args)
-    from repro.obs.trace import write_trace
-    with obs.recording(obs.Recorder()) as rec:
-        try:
-            return _train(args)
-        finally:
-            write_trace(args.trace_out, rec.events)
-            print(f"wrote trace: {args.trace_out} "
-                  f"({len(rec.events)} events)", flush=True)
+    return cli.run_traced(args, lambda: _train(args))
 
 
 def _train(args) -> dict:

@@ -381,3 +381,82 @@ def test_proc_spawn_worker_rejects_reused_id():
     with Coordinator(proc, 2):
         with pytest.raises(ValueError, match="never reused"):
             proc.spawn_worker(1)
+
+
+# ---------------------------------------------------------------------------
+# role/verb registry (cluster.roles): new roles plug in without touching
+# transport internals
+# ---------------------------------------------------------------------------
+def _echo_role():
+    """Register a toy role once per test session (the registry is
+    module-global); both transports must route it identically."""
+    from repro.cluster import roles
+    if roles.lookup("echo_ping") is None:
+        roles.register(roles.RoleSpec(
+            "echo", open_verb="echo_open",
+            make=lambda cmd: {"tag": cmd["tag"], "hits": 0},
+            verbs={"echo_ping": lambda st, cmd: {
+                "tag": st["tag"], "hits": st.__setitem__(
+                    "hits", st["hits"] + 1) or st["hits"],
+                "x": cmd.get("x", 0) * 2}}))
+
+
+def test_sim_role_registry_routes_custom_role():
+    _echo_role()
+    sim = SimTransport(FailureTrace())
+    sim.role_open(0, "echo", tag="a")
+    r = sim.role_call(0, "echo_ping", {"x": 21})
+    assert r == {"tag": "a", "hits": 1, "x": 42}
+    assert sim.role_call(0, "echo_ping")["hits"] == 2
+    with pytest.raises(ValueError, match="unknown role verb"):
+        sim.role_call(0, "no_such_verb")
+    with pytest.raises(KeyError, match="not open"):
+        sim.role_call(1, "echo_ping")    # host 1 never opened the role
+
+
+_ECHO_PLUGIN = """\
+from repro.cluster import roles
+
+if roles.lookup("echo_ping") is None:
+    roles.register(roles.RoleSpec(
+        "echo", open_verb="echo_open",
+        make=lambda cmd: {"tag": cmd["tag"], "hits": 0},
+        verbs={"echo_ping": lambda st, cmd: {
+            "tag": st["tag"],
+            "hits": st.__setitem__("hits", st["hits"] + 1) or st["hits"],
+            "x": cmd.get("x", 0) * 2}}))
+"""
+
+
+def test_proc_role_registry_routes_custom_role(tmp_path, monkeypatch):
+    """Out-of-tree roles reach worker children via ``role_modules``: the
+    plugin module registers on import, on both ends of the pipe."""
+    import os
+
+    _echo_role()                         # driver-side registration
+    (tmp_path / "echo_role_plugin.py").write_text(_ECHO_PLUGIN)
+    monkeypatch.setenv("PYTHONPATH", str(tmp_path) + os.pathsep
+                       + os.environ.get("PYTHONPATH", ""))
+    proc = ProcTransport(role_modules=["echo_role_plugin"])
+    with Coordinator(proc, 2):
+        proc.role_open(1, "echo", tag="b")
+        r = proc.role_call(1, "echo_ping", {"x": 5})
+        assert r == {"tag": "b", "hits": 1, "x": 10}
+        with pytest.raises(KeyError, match="not open"):
+            proc.role_call(0, "echo_ping")
+
+
+def test_ps_verbs_ride_the_registry():
+    """The PS compatibility wrappers are pure registry clients now: the
+    same state is reachable through both surfaces."""
+    sim = SimTransport(FailureTrace())
+    sim.ps_open(3, lr=0.5, entries={"w": np.ones(2, np.float32)})
+    sim.ps_push(3, worker=0, clock=1,
+                grads={"w": np.ones(2, np.float32)})
+    version, entries = sim.ps_pull(3)
+    assert version == 1
+    np.testing.assert_array_equal(entries["w"],
+                                  np.full(2, 0.5, np.float32))
+    # the generic surface sees the identical shard
+    reply = sim.role_call(3, "ps_pull")
+    assert reply["version"] == 1

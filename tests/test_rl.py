@@ -154,3 +154,55 @@ def test_impala_vtrace_beats_uncorrected_under_staleness():
     rets_n = [run(False, s) for s in (0, 10)]
     assert np.mean(rets_v) > 0.5  # V-trace learns through staleness
     assert np.mean(rets_v) >= np.mean(rets_n) - 0.05  # and is never worse
+
+# ---------------------------------------------------------------------------
+# replay properties (hypothesis when installed, boundary sweep otherwise —
+# tests/_hyp_compat.py)
+# ---------------------------------------------------------------------------
+from _hyp_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=24),
+       st.floats(min_value=8.0, max_value=64.0))
+def test_replay_sample_respects_priorities_never_unwritten(n, factor):
+    """For ANY fill level n < capacity and ANY boost factor:
+    `replay_update_priorities` + `replay_sample` draw only from the
+    written region (unwritten slots keep priority exactly 0), the
+    re-prioritized slot becomes the modal draw, and its importance
+    weight is the batch minimum (highest priority -> smallest w)."""
+    cap = 32
+    rep = RP.replay_init(cap, {"x": jnp.zeros(())})
+    rep = RP.replay_add(rep, {"x": jnp.arange(n, dtype=jnp.float32)},
+                        jnp.ones(n))
+    j = n // 2
+    rep = RP.replay_update_priorities(rep, jnp.array([j]),
+                                      jnp.array([factor]))
+    key = jax.random.PRNGKey(n * 1009 + int(factor))
+    items, idx, w = RP.replay_sample(rep, key, 512)
+    idx, w = np.asarray(idx), np.asarray(w)
+    assert (idx < n).all()                     # support == written region
+    counts = np.bincount(idx, minlength=cap)
+    assert counts[j] == counts.max()           # boosted slot dominates
+    assert counts[n:].sum() == 0
+    # sampled items round-trip the storage (we stored x[i] = i)
+    assert np.array_equal(np.asarray(items["x"]), idx.astype(np.float32))
+    assert np.isclose(w[idx == j].min(), w.min())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=8))
+def test_stratified_assign_balances_any_shape(n, shards):
+    """For ANY item count and shard count: `stratified_assign` spreads
+    load within one item across shards and deals the top-`shards`
+    priority band one-per-shard (a dead shard can't delete a band)."""
+    from repro.core.replay_shard import stratified_assign
+    rng = np.random.default_rng(n * 8 + shards)
+    prios = rng.uniform(0.1, 10.0, size=n)
+    assign = stratified_assign(prios, shards)
+    sizes = np.bincount(assign, minlength=shards)
+    assert sizes.max() - sizes.min() <= 1      # balanced
+    k = min(n, shards)
+    top = np.argsort(-prios, kind="stable")[:k]
+    assert len(set(assign[top])) == k          # top band spread out

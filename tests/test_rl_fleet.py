@@ -1,0 +1,211 @@
+"""Actor–learner fleet acceptance (ISSUE 8 / ROADMAP RL-fleet item).
+
+* deterministic sim: an injected single-actor kill costs ONLY that
+  actor's future rollouts — goodput >= 0.8x the failure-free run, and
+  the exact ratio is pinned (simulated time makes it arithmetic)
+* the learner trajectory (losses, published version, final params) is
+  bit-identical sim <-> proc for the same failure trace (CI
+  multihost-smoke runs the `proc` subset)
+* replay-shard death degrades sampling to the survivors; learner-host
+  death is fatal (it holds the canonical parameters)
+* the obs spine reads end-to-end: actor rollout / replay push–sample /
+  learner step spans, staleness gauge, membership instants
+* `core.replay_shard` unit behavior: ring writes, proportional
+  sampling never yields unwritten slots, priority-stratified sharding
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.replay_shard import (ParamStore, ReplayShard,
+                                     stratified_assign)
+from repro.elastic.membership import FailureTrace, TraceEvent
+from repro.obs import recorder as obs
+from repro.rl.fleet import run_fleet
+
+# small but structurally honest: 4 actors, 2 replay shards, 1 learner
+KW = dict(actors=4, replay_shards=2, steps=30, rollout_len=8, batch=8,
+          capacity=256, pull_every=4, evaluate=False)
+KILL_AT = 15
+
+
+# ---------------------------------------------------------------------------
+# deterministic sim goodput
+# ---------------------------------------------------------------------------
+def test_fleet_failure_free_goodput_is_deterministic():
+    a = run_fleet(**KW)
+    b = run_fleet(**KW)
+    # every actor collects rollout_len env steps per 1.0-time round
+    assert a.env_steps == KW["actors"] * KW["rollout_len"] * KW["steps"]
+    assert a.goodput == KW["actors"] * KW["rollout_len"]
+    assert a.losses == b.losses          # bit-identical replay
+    assert a.learner_steps > 0
+    assert a.final_actors == (0, 1, 2, 3)
+
+
+def test_actor_kill_costs_only_lost_throughput():
+    free = run_fleet(**KW)
+    fail = run_fleet(trace=FailureTrace.single_failure(KILL_AT, 1), **KW)
+    ratio = fail.goodput / free.goodput
+    # the dead actor stops contributing rollout_len per round from
+    # KILL_AT on; nothing rewinds, nobody barriers on the corpse
+    expect = 1.0 - (KW["steps"] - KILL_AT) / (KW["actors"] * KW["steps"])
+    assert ratio == pytest.approx(expect)
+    assert ratio >= 0.8                  # the acceptance floor
+    assert 1 not in fail.final_actors
+    assert fail.final_shards == (4, 5)   # replay service untouched
+    # the learner kept stepping every round — acting and learning are
+    # decoupled through the replay service
+    assert fail.learner_steps == free.learner_steps
+
+
+def test_slow_actor_acts_in_fewer_rounds():
+    trace = FailureTrace([TraceEvent(10, "slow", 0, rate=0.5)])
+    slow = run_fleet(trace=trace, **KW)
+    free = run_fleet(**KW)
+    # rate 0.5 => actor 0 contributes every other round after step 10
+    assert slow.env_steps < free.env_steps
+    assert slow.final_actors == (0, 1, 2, 3)   # still alive, just slow
+
+
+# ---------------------------------------------------------------------------
+# sim <-> proc bit-identity (CI multihost-smoke: -k proc)
+# ---------------------------------------------------------------------------
+def test_proc_fleet_learner_trajectory_bit_identical_to_sim():
+    from repro.cluster import ProcTransport
+
+    trace = FailureTrace.single_failure(KILL_AT, 1)
+    sim = run_fleet(trace=trace, **KW)
+    proc = run_fleet(transport=ProcTransport(inject=trace), **KW)
+    assert sim.transitions == proc.transitions
+    assert sim.losses == proc.losses     # float-for-float
+    assert sim.final_version == proc.final_version
+    assert (sim.staleness_max, sim.staleness_sum) == \
+        (proc.staleness_max, proc.staleness_sum)
+    for a, b in zip(jax.tree_util.tree_leaves(sim.final_params),
+                    jax.tree_util.tree_leaves(proc.final_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert sim.goodput / (KW["actors"] * KW["rollout_len"]) >= 0.8
+
+
+# ---------------------------------------------------------------------------
+# role-host death semantics
+# ---------------------------------------------------------------------------
+def test_replay_shard_death_degrades_to_survivors():
+    # shard ids are actors..actors+R-1 = 4,5; kill shard 4 mid-run
+    fail = run_fleet(trace=FailureTrace.single_failure(KILL_AT, 4), **KW)
+    assert fail.final_shards == (5,)
+    assert fail.final_actors == (0, 1, 2, 3)
+    # learning continued on the surviving shard after the death round
+    assert fail.learner_steps > KILL_AT
+    # acting throughput is untouched: replay capacity, not actors, died
+    assert fail.goodput == KW["actors"] * KW["rollout_len"]
+
+
+def test_learner_host_death_is_fatal():
+    with pytest.raises(RuntimeError, match="learner host"):
+        run_fleet(trace=FailureTrace.single_failure(KILL_AT, 6), **KW)
+
+
+def test_all_replay_shards_dead_is_fatal():
+    trace = FailureTrace([TraceEvent(KILL_AT, "fail", 4),
+                          TraceEvent(KILL_AT + 1, "fail", 5)])
+    with pytest.raises(RuntimeError, match="replay shards"):
+        run_fleet(trace=trace, **KW)
+
+
+# ---------------------------------------------------------------------------
+# obs spine end-to-end
+# ---------------------------------------------------------------------------
+def test_fleet_trace_reads_end_to_end():
+    with obs.recording(obs.Recorder()) as rec:
+        run_fleet(trace=FailureTrace.single_failure(KILL_AT, 1), **KW)
+    names = {e.name for e in rec.events}
+    assert "actor.rollout" in names
+    assert "replay.push" in names and "replay.sample" in names
+    assert "replay.update" in names
+    assert "learner.step" in names
+    assert "learner.open" in names and "replay.open" in names
+    assert "membership.death" in names   # the injected kill
+    # staleness was observed and is bounded by the pull period
+    assert rec.registry.get("rl.staleness") is not None
+    expect = (1.0 - (KW["steps"] - KILL_AT) / (KW["actors"] * KW["steps"])
+              ) * KW["actors"] * KW["rollout_len"]
+    assert rec.registry["rl.goodput"] == pytest.approx(expect)
+    # role lanes: replay spans land on the shard hosts' lanes
+    hosts = {e.host for e in rec.events if e.name == "replay.push"}
+    assert hosts <= {"replay4", "replay5"} and hosts
+
+
+def test_fleet_staleness_bounded_by_pull_period():
+    res = run_fleet(**KW)
+    # an actor pulls every pull_every acts; with one learner publish
+    # per round its params can lag at most ~pull_every versions
+    assert 0 < res.staleness_max <= KW["pull_every"]
+
+
+# ---------------------------------------------------------------------------
+# core.replay_shard units
+# ---------------------------------------------------------------------------
+def _items(n, base=0.0):
+    return {"x": np.arange(n, dtype=np.float32)[:, None] + base}
+
+
+def test_replay_shard_never_samples_unwritten_slots():
+    sh = ReplayShard(capacity=16, seed=3)
+    sh.push(0, 0, _items(5), np.ones(5))
+    for s in range(8):
+        idx, items, w = sh.sample(64, seed=s)
+        assert (idx < 5).all()           # only the written region
+        assert (w > 0).all() and w.dtype == np.float32
+        assert items["x"].shape == (64, 1)
+
+
+def test_replay_shard_ring_wraps_and_reprioritizes():
+    sh = ReplayShard(capacity=8, alpha=1.0, seed=0)
+    sh.push(0, 0, _items(6), np.ones(6))
+    sh.push(0, 1, _items(6, base=100.0), np.ones(6))   # wraps: slots 6,7,0..3
+    assert sh.size == 8 and sh.cursor == 4
+    # slot 4 still holds first-push item 4; slot 0 was overwritten
+    assert sh.store["x"][4, 0] == 4.0
+    assert sh.store["x"][0, 0] == 102.0
+    v0 = sh.version
+    sh.update(np.array([5]), np.array([1000.0]))
+    assert sh.version == v0 + 1
+    idx, _, _ = sh.sample(512, seed=1)
+    counts = np.bincount(idx, minlength=8)
+    assert counts[5] == counts.max()     # boosted slot dominates
+
+
+def test_replay_shard_sampling_is_requester_seeded():
+    a, b = ReplayShard(16, seed=7), ReplayShard(16, seed=7)
+    for sh in (a, b):
+        sh.push(0, 0, _items(10), np.linspace(0.1, 2.0, 10))
+    ia, _, wa = a.sample(32, seed=5)
+    ib, _, wb = b.sample(32, seed=5)
+    assert np.array_equal(ia, ib) and np.array_equal(wa, wb)
+    ic, _, _ = a.sample(32, seed=6)
+    assert not np.array_equal(ia, ic)    # a new seed is a new draw
+
+
+def test_stratified_assign_deals_priority_spectrum_across_shards():
+    prios = np.array([9.0, 1.0, 8.0, 2.0, 7.0, 3.0, 6.0, 4.0])
+    assign = stratified_assign(prios, 2)
+    # rank order 9,8,7,6,4,3,2,1 dealt 0,1,0,1,...: each shard holds a
+    # cross-section, so one shard's death never deletes the high band
+    top4 = np.argsort(-prios, kind="stable")[:4]
+    assert sorted(assign[top4]) == [0, 0, 1, 1]
+    assert sorted(np.bincount(assign)) == [4, 4]
+    # deterministic
+    assert np.array_equal(assign, stratified_assign(prios, 2))
+
+
+def test_param_store_versions_publishes():
+    ps = ParamStore()
+    assert ps.publish({"w": np.ones(3, np.float32)}) == 1
+    assert ps.publish({"w": np.full(3, 2.0, np.float32)}) == 2
+    version, entries = ps.pull()
+    assert version == 2
+    assert np.array_equal(entries["w"], np.full(3, 2.0, np.float32))
+    entries["w"][0] = 99.0               # pull returns copies
+    assert ps.pull()[1]["w"][0] == 2.0
