@@ -20,6 +20,11 @@ reliable one, while PS push/pull only loses the affected worker's
 throughput — `contrast.ps_vs_allreduce` quantifies exactly that on the
 churn trace.
 
+A `speculation` section runs sync on a slow-heavy trace (rate straggler
++ three checkpoint-adjacent hang deaths) twice — DBS alone vs
+speculation+DBS — and asserts the backup-task win: covered deaths skip
+the rewind entirely, goodput >= 1.1x DBS alone (deterministic, gated).
+
   PYTHONPATH=src python benchmarks/bench_elastic.py [--quick]
       [--modes sync,local_sgd,easgd,async_ps,ssp]
 """
@@ -50,13 +55,31 @@ def churn_trace(steps: int, workers: int) -> FailureTrace:
     ])
 
 
+def slow_heavy_trace(steps: int, ckpt_every: int) -> FailureTrace:
+    """Tail-latency scenario: one rate straggler (DBS's territory) plus
+    three hang->timeout deaths pinned where the rewind hurts most — the
+    death lands one train-step before the next checkpoint, so the
+    non-speculative run redoes ckpt_every-1 steps each time.  Each prior
+    rewind makes train_step lag the wall clock by ckpt_every-1, so later
+    hangs compensate for the accumulated lag to stay pinned."""
+    c = ckpt_every
+    s = max(steps // 5, 1)
+    ev = [TraceEvent(max(s // 2, 1), "slow", 1, 0.25)]
+    for i, w in enumerate((2, 3, 4)):
+        lag = i * (c - 1)
+        base = (i + 1) * s
+        h = base - ((base + 2 - lag) - (c - 1)) % c
+        ev.append(TraceEvent(max(h, 1), "hang", w))
+    return FailureTrace(ev)
+
+
 def run_mode(mode: str, trace, *, workers, steps, batch, ckpt_every,
-             staleness):
+             staleness, spec_slack=None):
     with tempfile.TemporaryDirectory() as d:
         return run_elastic(ElasticProblem(), mode=mode, workers=workers,
                            steps=steps, global_batch=batch, trace=trace,
                            ckpt_dir=d, ckpt_every=ckpt_every,
-                           staleness=staleness)
+                           staleness=staleness, spec_slack=spec_slack)
 
 
 def main(argv=None) -> dict:
@@ -110,7 +133,7 @@ def main(argv=None) -> dict:
                 "recoveries": len(res.recoveries),
                 "splits_replanned": res.splits_replanned,
             }
-            if res.mode_stats:   # PS family observability
+            if "blocked_rounds" in res.mode_stats:  # PS observability
                 rows[name]["blocked_rounds"] = \
                     res.mode_stats["blocked_rounds"]
                 rows[name]["max_clock_gap"] = \
@@ -155,6 +178,38 @@ def main(argv=None) -> dict:
             # least as well as the all-reduce barrier does
             assert contrast["async_ps"]["churn_ratio_vs_sync"] >= 1.0, (
                 "async_ps lost MORE goodput to churn than sync all-reduce")
+
+    # speculative backup execution on the slow-heavy trace: DBS resplits
+    # around the rate straggler in BOTH runs, but a hang is invisible to
+    # a resplit — only the speculation run covers the hung shards
+    # (suspect ETA -> backup at the barrier), so every hang->timeout
+    # death lands with lost_steps=0 instead of a rewind to the commit
+    # floor.  Deterministic (simulated clock), so the >= 1.1x claim is a
+    # hard assert here and a ratio gate in check_regression.py.
+    if "sync" in modes:
+        spec_kw = dict(workers=args.workers, steps=args.steps,
+                       batch=args.batch, ckpt_every=args.ckpt_every,
+                       staleness=args.staleness)
+        heavy = lambda: slow_heavy_trace(args.steps, args.ckpt_every)
+        dbs = run_mode("sync", heavy(), **spec_kw)
+        spec = run_mode("sync", heavy(), spec_slack=1.5, **spec_kw)
+        spec_ratio = spec.goodput / dbs.goodput
+        stats = spec.mode_stats["speculation"]
+        report["speculation"] = {
+            "goodput_dbs": dbs.goodput, "goodput_spec": spec.goodput,
+            "goodput_ratio": spec_ratio,
+            "lost_steps_dbs": sum(r.lost_steps for r in dbs.recoveries),
+            "lost_steps_spec": sum(r.lost_steps for r in spec.recoveries),
+            **stats,
+        }
+        print(f"speculation,slow_heavy,{spec.goodput:.3f},"
+              f"{spec_ratio:.3f},covered,{stats['covered_deaths']},"
+              f"wasted_rows,{stats['wasted_rows']}")
+        assert stats["covered_deaths"] == 3, (
+            f"speculation covered {stats['covered_deaths']}/3 hang deaths")
+        assert spec_ratio >= 1.1, (
+            f"speculation+DBS goodput {spec_ratio:.3f}x DBS alone on the "
+            f"slow-heavy trace (claim: >= 1.1x)")
 
     # observability overhead: recording a run must cost <= 3% of its
     # goodput.  Simulated goodput is instrumentation-invariant by

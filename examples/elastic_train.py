@@ -3,9 +3,12 @@
 Part 1 replays one failure trace through all three recovery policies on
 the deterministic simulation driver and prints what each one does about
 a mid-run death (checkpoint rewind vs survivor continuation vs center
-survival).  Part 2 runs REAL elastic LM training — the same trace
-machinery behind `launch/train.py --elastic` — and shows the loss
-recovering through a worker death and a straggler replan.
+survival).  Part 2 contrasts DBS alone vs speculative backup execution
+(`spec_slack`) on a slow-heavy trace — backups win the barrier for a
+hung shard, so its timeout death is covered instead of rewound.  Part 3
+runs REAL elastic LM training — the same trace machinery behind
+`launch/train.py --elastic` — and shows the loss recovering through a
+worker death and a straggler replan.
 
   PYTHONPATH=src python examples/elastic_train.py
 """
@@ -42,7 +45,34 @@ for mode in ("sync", "local_sgd", "easgd"):
           f"death -> {how} | DBS replans: {fail.splits_replanned}")
 
 # ---------------------------------------------------------------------------
-# 2. the real thing: elastic LM training with a trace file
+# 2. speculative backup execution on a slow-heavy trace
+# ---------------------------------------------------------------------------
+# DBS re-splitting handles rate stragglers (part 1), but a HUNG worker
+# is invisible to a resplit: sync either stalls into a rewind, or —
+# with spec_slack set — the coordinator launches a backup copy of the
+# hung shard on the least-loaded healthy host and takes the first
+# result, so the eventual timeout death loses nothing ("covered").
+# The hang lands just before a checkpoint: the worst case for the
+# rewind, the case backups erase.
+heavy = lambda: FailureTrace([TraceEvent(step=12, kind="hang", worker=2)])
+with tempfile.TemporaryDirectory() as d:
+    dbs = run_elastic(problem, mode="sync", workers=4, steps=20,
+                      global_batch=32, ckpt_dir=d, ckpt_every=5,
+                      trace=heavy())
+with tempfile.TemporaryDirectory() as d:
+    spec = run_elastic(problem, mode="sync", workers=4, steps=20,
+                       global_batch=32, ckpt_dir=d, ckpt_every=5,
+                       trace=heavy(), spec_slack=1.5)
+st = spec.mode_stats["speculation"]
+print(f"slow-heavy  DBS alone: goodput {dbs.goodput:.2f}, rewind lost "
+      f"{sum(r.lost_steps for r in dbs.recoveries)} steps | spec+DBS: "
+      f"goodput {spec.goodput:.2f} ({spec.goodput / dbs.goodput:.2f}x), "
+      f"backups won {st['won']}, covered deaths {st['covered_deaths']}, "
+      f"lost {sum(r.lost_steps for r in spec.recoveries)} steps "
+      f"(wasted {st['wasted_rows']} rows of backup compute)")
+
+# ---------------------------------------------------------------------------
+# 3. the real thing: elastic LM training with a trace file
 # ---------------------------------------------------------------------------
 with tempfile.TemporaryDirectory() as d:
     tp = pathlib.Path(d) / "trace.json"

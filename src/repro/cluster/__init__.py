@@ -40,6 +40,23 @@ Architecture (the survey's coordination layer, made a subsystem):
   degrades to survivors).  Out-of-tree roles reach proc children via
   `ProcTransport(role_modules=[...])`.
 
+* **Speculative execution** (`coordinator.py` `Speculator` +
+  `elastic.straggler.plan_backup`) — tail-latency mitigation beyond
+  DBS re-splitting: when one shard's predicted barrier ETA (rows /
+  monitored rate; SUSPECT workers are unbounded) blows a configurable
+  slack over the fleet median, the driver launches a redundant copy on
+  the least-loaded healthy host via the `backup` role and takes the
+  first result.  Arbitration is decided deterministically by the
+  driver (ETA compare) and made race-safe by the helper-side
+  `BackupLedger` (a task resolves exactly once; late/duplicate
+  commit/cancel are refused no-ops), so a discarded loser can never
+  double-apply — both copies are the same bytes, which is why
+  speculation never changes committed numerics, only the clock.
+  Opt-in per mode via `run_elastic(spec_slack=...)`: sync covers
+  straggler deaths at the barrier (no rewind), ssp spends gate-blocked
+  fast workers on the straggler's step, async_ps has no barrier and
+  ignores the knob.
+
 The cross-transport contract (pinned by `tests/test_cluster.py` and
 gated by `benchmarks/bench_multihost.py`): the same trace driven through
 either transport yields the identical membership transition log, and the

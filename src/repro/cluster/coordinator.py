@@ -37,13 +37,14 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.elastic.membership import (DEAD, FailureTrace, Membership,
-                                      Transition)
-from repro.elastic.straggler import ThroughputMonitor, replan_on_straggle
+from repro.elastic.membership import (DEAD, SUSPECT, FailureTrace,
+                                      Membership, Transition)
+from repro.elastic.straggler import (BackupDecision, ThroughputMonitor,
+                                     plan_backup, replan_on_straggle)
 from repro.obs import recorder as obs
 
 from repro.cluster.sim import SimTransport
-from repro.cluster.transport import Transport
+from repro.cluster.transport import RoleHostDied, Transport
 
 Pytree = Any
 
@@ -87,6 +88,13 @@ class Coordinator:
 
     def rates(self) -> Dict[int, float]:
         return self.membership.rates()
+
+    def suspects(self) -> Tuple[int, ...]:
+        """Workers the failure detector currently holds SUSPECT (silent
+        past `suspect_after` but not yet past the heartbeat timeout) —
+        the ETA model treats their arrival as unbounded."""
+        return tuple(sorted(w for w, s in self.membership.workers.items()
+                            if s.status == SUSPECT))
 
     def transition_log(self) -> List[Tuple]:
         """The full membership history in canonical serializable form —
@@ -164,6 +172,22 @@ class Coordinator:
         ids = tuple(alive) if alive is not None else self.alive()
         return replan_on_straggle(self.monitor, ids, global_batch,
                                   threshold=threshold, multiple=multiple)
+
+    # -- speculative execution (ETA prediction) ------------------------
+    def plan_backup(self, split: Dict[int, int], *, slack: float,
+                    rates: Optional[Dict[int, float]] = None
+                    ) -> Optional[BackupDecision]:
+        """ETA-predict the split's barrier arrivals and decide whether
+        the slowest shard deserves a backup execution on the
+        least-loaded healthy host (`elastic.straggler.plan_backup`).
+        Rates default to the monitor's telemetry (what `plan_split`
+        uses); SUSPECT workers come from the membership machine, so the
+        decision reflects the same failure-detector state on every
+        transport."""
+        return plan_backup(split,
+                           rates if rates is not None
+                           else self.monitor.rates(list(split)),
+                           slack=slack, suspects=self.suspects())
 
     # -- multi-host checkpoint consistency -----------------------------
     def report_commit(self, host: int, step: Optional[int]) -> None:
@@ -252,3 +276,109 @@ class Coordinator:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class Speculator:
+    """Backup-execution lifecycle against the transport's "backup" role.
+
+    The coordinator decides WHETHER to back a shard up (`plan_backup`)
+    and WHICH copy wins (the deterministic ETA compare in
+    `BackupDecision.winner`); this object carries that decision through
+    the helper host's `BackupLedger` — launch / commit / cancel verbs
+    through the role registry, so sim and proc dispatch identically —
+    and keeps the wasted-compute accounting.  The ledger is the
+    exactly-once authority: a commit that loses the race (or lands on a
+    dead helper) simply reports the backup lost, and the primary's
+    result stands.  A helper death mid-RPC (`RoleHostDied`) is never
+    fatal here — losing the redundant copy costs nothing but the
+    compute already billed."""
+
+    def __init__(self, coord: Coordinator):
+        self.coord = coord
+        self.launched = 0
+        self.won = 0
+        self.discarded = 0
+        self.wasted_rows = 0
+        self.covered_deaths = 0
+        self._open_hosts: set = set()
+
+    def task_key(self, decision: BackupDecision, step: int) -> str:
+        """generation:step:shard — the generation fences out a stale
+        decision that outlives a membership change (its commit/cancel
+        can never collide with a post-rewind relaunch of the shard)."""
+        return f"{self.coord.generation}:{step}:{decision.straggler}"
+
+    def launch(self, decision: BackupDecision, step: int) -> bool:
+        """Start the redundant execution on the helper host.  False if
+        the helper refused (duplicate task) or died first — the caller
+        must then treat the round as having no backup."""
+        host, task = decision.helper, self.task_key(decision, step)
+        t = self.coord.transport
+        try:
+            if host not in self._open_hosts:
+                t.role_open(host, "backup")
+                self._open_hosts.add(host)
+            reply = t.role_call(host, "backup_launch",
+                                {"task": task, "shard": decision.straggler,
+                                 "rows": decision.rows})
+        except RoleHostDied:
+            return False
+        if not reply.get("accepted"):
+            return False
+        self.launched += 1
+        rec = obs.get()
+        if rec.enabled:
+            rec.event("backup.launch", cat="cluster", host=host,
+                      task=task, shard=decision.straggler,
+                      rows=decision.rows)
+        return True
+
+    def resolve(self, decision: BackupDecision, step: int, *,
+                winner: str) -> bool:
+        """First-result-wins commit at the barrier.  True iff the
+        backup's copy is the one committed — which requires both the
+        driver's arbitration to name it AND the helper's ledger to
+        confirm the task was still in flight (exactly-once under proc
+        races).  Either way the losing copy is discarded idempotently
+        and its rows are billed as wasted compute."""
+        host, task = decision.helper, self.task_key(decision, step)
+        if winner == "backup":
+            try:
+                reply = self.coord.transport.role_call(
+                    host, "backup_commit", {"task": task})
+            except RoleHostDied:
+                reply = {"won": False}
+            if reply.get("won"):
+                self.won += 1
+                self.wasted_rows += decision.rows  # the primary's copy
+                rec = obs.get()
+                if rec.enabled:
+                    rec.event("backup.win", cat="cluster", host=host,
+                              task=task, shard=decision.straggler)
+                    rec.count("speculation.wasted_rows", decision.rows)
+                return True
+        self.cancel(decision, step)
+        return False
+
+    def cancel(self, decision: BackupDecision, step: int) -> None:
+        """Discard the backup (idempotent: safe on already-resolved
+        tasks and on dead helpers)."""
+        host, task = decision.helper, self.task_key(decision, step)
+        try:
+            self.coord.transport.role_call(host, "backup_cancel",
+                                           {"task": task})
+        except RoleHostDied:
+            pass                      # the ledger died with its host
+        self.discarded += 1
+        self.wasted_rows += decision.rows     # the backup's copy
+        rec = obs.get()
+        if rec.enabled:
+            rec.event("backup.discard", cat="cluster", host=host,
+                      task=task, shard=decision.straggler)
+            rec.count("speculation.wasted_rows", decision.rows)
+
+    def stats(self) -> Dict[str, int]:
+        return {"launched": self.launched, "won": self.won,
+                "discarded": self.discarded,
+                "wasted_rows": self.wasted_rows,
+                "covered_deaths": self.covered_deaths}

@@ -234,6 +234,73 @@ register(RoleSpec("replay", open_verb="replay_open", make=_replay_make,
 
 
 # ---------------------------------------------------------------------------
+# role: "backup" — speculative-execution ledger on the helper host
+# ---------------------------------------------------------------------------
+class BackupLedger:
+    """Exactly-once arbitration for speculative shard re-execution.
+
+    The DRIVER picks the winner (a deterministic ETA compare on the
+    simulated clock — `elastic.straggler.BackupDecision.winner`); this
+    ledger makes that decision safe under the proc transport's real
+    races: a task resolves at most once, and every verb is an
+    idempotent no-op afterwards, so a duplicated or late message can
+    never double-apply a backup's gradient contribution.  Task keys are
+    `generation:step:shard`, so a decision that survives a membership
+    change is fenced out by the generation bump."""
+
+    INFLIGHT, WON, DISCARDED = "inflight", "won", "discarded"
+
+    def __init__(self):
+        self.tasks: Dict[str, str] = {}
+
+
+def _backup_make(cmd: Dict) -> Any:
+    return BackupLedger()
+
+
+def _backup_launch(led: BackupLedger, cmd: Dict) -> Dict:
+    task = cmd["task"]
+    if task in led.tasks:                    # duplicate launch: refused
+        return {"accepted": False, "state": led.tasks[task]}
+    led.tasks[task] = led.INFLIGHT
+    return {"accepted": True, "state": led.INFLIGHT}
+
+
+def _backup_commit(led: BackupLedger, cmd: Dict) -> Dict:
+    task = cmd["task"]
+    if led.tasks.get(task) != led.INFLIGHT:  # unknown or already resolved
+        return {"won": False, "state": led.tasks.get(task, "unknown")}
+    led.tasks[task] = led.WON
+    return {"won": True, "state": led.WON}
+
+
+def _backup_cancel(led: BackupLedger, cmd: Dict) -> Dict:
+    task = cmd["task"]
+    if led.tasks.get(task) != led.INFLIGHT:
+        return {"discarded": False,
+                "state": led.tasks.get(task, "unknown")}
+    led.tasks[task] = led.DISCARDED
+    return {"discarded": True, "state": led.DISCARDED}
+
+
+def _backup_stats(led: BackupLedger, cmd: Dict) -> Dict:
+    states = list(led.tasks.values())
+    return {"tasks": len(states),
+            "inflight": states.count(led.INFLIGHT),
+            "won": states.count(led.WON),
+            "discarded": states.count(led.DISCARDED)}
+
+
+register(RoleSpec("backup", open_verb="backup_open", make=_backup_make,
+                  verbs={
+    "backup_launch": _backup_launch,
+    "backup_commit": _backup_commit,
+    "backup_cancel": _backup_cancel,
+    "backup_stats": _backup_stats,
+}))
+
+
+# ---------------------------------------------------------------------------
 # role: "learner" — published-parameters store actors pull from
 # ---------------------------------------------------------------------------
 def _learner_make(cmd: Dict) -> Any:

@@ -183,7 +183,8 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
                 async_ckpt: bool = False,
                 transport=None,
                 staleness: int = 2,
-                num_ps: int = 1) -> ElasticRunResult:
+                num_ps: int = 1,
+                spec_slack: Optional[float] = None) -> ElasticRunResult:
     """Run `steps` elastic training rounds under a failure trace.
 
     The loop itself is mode-agnostic: each wall step advances the
@@ -212,6 +213,16 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
     staleness / num_ps: the PS family's knobs — SSP's bounded staleness
     window and the number of ParamServer shard hosts (which join the
     membership at ids workers..workers+num_ps-1 above the workers).
+
+    spec_slack: speculative execution (sync and ssp modes).  When set, a
+    shard whose barrier ETA exceeds spec_slack x the fleet median (or
+    whose worker is SUSPECT) gets a redundant backup run on the
+    least-loaded healthy host; whichever copy lands first commits, the
+    loser is discarded idempotently through the transport's "backup"
+    role ledger, and the duplicated compute is billed as overhead.
+    None (the default) disables it — the zero-backup path is
+    byte-identical to earlier drivers, and so is a run where speculation
+    is enabled but never fires.
     """
     from repro.cluster.coordinator import Coordinator
     from repro.cluster.sim import SimTransport
@@ -240,7 +251,7 @@ def run_elastic(problem: ElasticProblem, *, mode: str = "sync",
         restore_penalty=restore_penalty,
         straggle_threshold=straggle_threshold, easgd_rho=easgd_rho,
         async_ckpt=async_ckpt, staleness=staleness, num_ps=num_ps,
-        nominal_t=global_batch / workers)
+        spec_slack=spec_slack, nominal_t=global_batch / workers)
 
     # observability: spans land on the *simulated* clock, so a replayed
     # trace emits a bit-identical timeline (tests/test_obs.py pins this)

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -51,7 +52,7 @@ from repro.elastic.recovery import (BoundedStalenessContinuation,
                                     EASGDCenterSurvival,
                                     SyncCheckpointRestore)
 from repro.elastic.reshard import save_stacked
-from repro.elastic.straggler import step_time
+from repro.elastic.straggler import BackupDecision, step_time
 from repro.obs import recorder as obs
 
 Pytree = Any
@@ -79,6 +80,10 @@ class ModeContext:
     async_ckpt: bool
     staleness: Optional[int]
     num_ps: int
+    # speculative execution: ETA slack over the fleet median past which
+    # the slowest shard gets a backup run (None = disabled, the default
+    # — the zero-backup path must re-land byte-identical)
+    spec_slack: Optional[float] = None
     nominal_t: float = 0.0       # one uniform worker's step work
     # mutable run state
     train_step: int = 0
@@ -170,6 +175,11 @@ class SyncAllReduce(TrainingMode):
 
     def __init__(self):
         self.policy: Optional[SyncCheckpointRestore] = None
+        self.spec = None          # Speculator when ctx.spec_slack is set
+        # the last round's fired decision: while its straggler stays
+        # silent, the helper's redundant copy of that shard is standing
+        # coverage for the in-flight barrier
+        self._cover = None
 
     def setup(self, ctx: ModeContext) -> None:
         self.params = ctx.problem.init_params()
@@ -182,12 +192,37 @@ class SyncAllReduce(TrainingMode):
                                             async_save=ctx.async_ckpt,
                                             coordinator=ctx.coord, host=-1)
         self.policy.checkpoint(0, self.params, self.opt_state)
+        if ctx.spec_slack is not None:
+            from repro.cluster.coordinator import Speculator
+            self.spec = Speculator(ctx.coord)
 
     def on_membership_change(self, ctx, deaths, joins, old_ids, new_ids):
         from repro.elastic.driver import RecoveryRecord
 
         if not deaths:
             return  # joins just widen the next split
+        cover, self._cover = self._cover, None
+        if cover is not None:
+            dec, dec_step = cover
+            if {d.worker for d in deaths} == {dec.straggler}:
+                # covered death: the straggled shard's last result landed
+                # from its backup (first-result-wins at the barrier), so
+                # nothing in flight is lost with the corpse — no restore,
+                # no rewind, lost_steps=0.  This is the speculation
+                # payoff DBS cannot reach: by the time the detector
+                # declares the death, the work already exists elsewhere.
+                self.spec.covered_deaths += 1
+                rec = obs.get()
+                if rec.enabled:
+                    rec.event("backup.cover", cat="cluster",
+                              host=dec.helper, shard=dec.straggler,
+                              step=dec_step)
+                for d in deaths:
+                    ctx.recoveries.append(
+                        RecoveryRecord(d.step, d.worker, d.cause, 0))
+                return
+            # the helper died (its own shard was in the collective) or
+            # an uninvolved worker did: the coverage is void either way
         # the in-flight collective died: restore + rewind.  The span's
         # duration is the simulated restore pause it charges.
         with obs.get().span("restore", cat="elastic",
@@ -209,6 +244,16 @@ class SyncAllReduce(TrainingMode):
                                            threshold=ctx.straggle_threshold)
         if slow:
             ctx.replans += 1
+        # speculation: if one shard's ETA blows the slack over the fleet
+        # median (or its worker is SUSPECT), launch a redundant copy on
+        # the least-loaded healthy host before the barrier
+        dec = None
+        if self.spec is not None:
+            dec = ctx.coord.plan_backup(split, slack=ctx.spec_slack,
+                                        rates=rates)
+            if dec is not None and not self.spec.launch(dec,
+                                                        ctx.train_step):
+                dec = None        # helper refused or died: no backup
         batch = ctx.problem.stack(ids, ctx.train_step, split)
         batches_w = {k: jnp.asarray(v) for k, v in batch.items()}
         losses_w, grads_w = DP.per_worker_grads(
@@ -221,7 +266,25 @@ class SyncAllReduce(TrainingMode):
         self.params, self.opt_state = ctx.opt.update(g, self.opt_state,
                                                      self.params)
         ctx.losses[ctx.train_step] = float(jnp.dot(wts, losses_w))
-        ctx.sim_time += step_time(split, rates)
+        if dec is None:
+            self._cover = None
+            ctx.sim_time += step_time(split, rates)
+        else:
+            # first-result-wins barrier: every healthy shard must land,
+            # but the straggled shard only costs the EARLIER of its two
+            # copies.  The helper's double duty is inside eta_backup, so
+            # backup compute extends the barrier (billed as overhead —
+            # no extra useful samples) exactly when the backup is on the
+            # critical path.  The gradient math above never looked at
+            # the winner: both copies are the same bytes, which is why
+            # arbitration order can never change the committed result.
+            winner_eta = min(dec.eta_primary, dec.eta_backup)
+            others = max((split[w] / max(rates.get(w, 1.0), 1e-9)
+                          for w in split if w != dec.straggler),
+                         default=0.0)
+            ctx.sim_time += max(others, winner_eta)
+            self.spec.resolve(dec, ctx.train_step, winner=dec.winner)
+            self._cover = (dec, ctx.train_step)
         if ctx.ckpt_every and (ctx.train_step + 1) % ctx.ckpt_every == 0:
             self.policy.checkpoint(ctx.train_step + 1, self.params,
                                    self.opt_state)
@@ -231,6 +294,9 @@ class SyncAllReduce(TrainingMode):
 
     def final_params(self):
         return self.params
+
+    def mode_stats(self):
+        return {"speculation": self.spec.stats()} if self.spec else {}
 
     def wait(self):
         self.policy.wait()
@@ -428,6 +494,7 @@ class _ParamServerMode(TrainingMode):
         self.extra_hosts = num_ps
         self._ckpt = None
         self.gate = None
+        self.spec = None          # Speculator when ctx.spec_slack is set
 
     def setup(self, ctx: ModeContext) -> None:
         from repro.checkpoint.ckpt import _flatten, _unflatten_like
@@ -462,6 +529,12 @@ class _ParamServerMode(TrainingMode):
         self.n = max(1, round(ctx.global_batch / ctx.workers))
         self._grad = jax.jit(jax.value_and_grad(ctx.problem.loss_fn))
         self._transport = ctx.coord.transport
+        # SSP opt-in to speculative execution: only a finite staleness
+        # window can be blocked by a straggler, so async_ps (staleness
+        # None) never fires even when the knob is set
+        if ctx.spec_slack is not None and self.staleness is not None:
+            from repro.cluster.coordinator import Speculator
+            self.spec = Speculator(ctx.coord)
 
     # -- membership ----------------------------------------------------
     def on_membership_change(self, ctx, deaths, joins, old_ids, new_ids):
@@ -506,6 +579,13 @@ class _ParamServerMode(TrainingMode):
             self.credit[w] -= 1.0
             round_losses.append(self._worker_step(ctx, w))
             ctx.add_samples(self.n)
+        if self.spec is not None:
+            blocked_now = [w for w in workers
+                           if self.credit.get(w, 0.0) >= 1.0
+                           and not self.gate.can_advance(w)]
+            if blocked_now:
+                self._backup_slowest(ctx, workers, rates, blocked_now,
+                                     round_losses)
         for w in workers:
             self.max_gap = max(self.max_gap, self.gate.gap(w))
         if round_losses:
@@ -521,6 +601,41 @@ class _ParamServerMode(TrainingMode):
         if ctx.ckpt_dir and ctx.ckpt_every and \
                 (ctx.train_step + 1) % ctx.ckpt_every == 0:
             self._checkpoint(ctx, ctx.train_step + 1)
+
+    def _backup_slowest(self, ctx, workers, rates, blocked,
+                        round_losses) -> None:
+        """SSP speculation: a gate-blocked fast worker has idle capacity
+        by definition — spend it re-executing the slowest worker's next
+        step so the staleness window reopens for everyone.
+
+        The backup computes the identical (worker, clock)-keyed batch
+        the straggler would have, pushes under the straggler's advanced
+        clock, and the straggler's aborted in-flight partial step is the
+        discarded loser: its banked credit drops to zero and the
+        duplicated rows are billed as wasted compute through the same
+        Speculator/ledger verbs the sync barrier uses."""
+        s = min(workers, key=lambda w: (self.gate.clocks[w], w))
+        suspects = set(ctx.coord.suspects())
+        rate_s = rates.get(s, 1.0)
+        if s not in suspects and rate_s * ctx.spec_slack >= 1.0:
+            return      # the straggler lands within the slack anyway
+        helpers = [w for w in blocked if w != s and w not in suspects]
+        if not helpers:
+            return
+        helper = min(helpers, key=lambda w: (-rates.get(w, 1.0), w))
+        dec = BackupDecision(
+            straggler=s, helper=helper, rows=self.n,
+            eta_primary=(math.inf if s in suspects
+                         else self.n / max(rate_s, 1e-9)),
+            eta_backup=float(self.n))
+        if dec.winner != "backup":
+            return
+        if not self.spec.launch(dec, ctx.train_step):
+            return
+        round_losses.append(self._worker_step(ctx, s))
+        ctx.add_samples(self.n)
+        self.credit[s] = 0.0
+        self.spec.resolve(dec, ctx.train_step, winner="backup")
 
     def _worker_step(self, ctx, w: int) -> float:
         params = self.final_params()            # pull
@@ -569,14 +684,17 @@ class _ParamServerMode(TrainingMode):
         return tuple(w for w in ids if w not in self.ps_ids)
 
     def mode_stats(self):
-        return {"ps_ids": self.ps_ids,
-                "ps_params": self._pull_flat(),
-                "versions": dict(self._versions),
-                "clocks": dict(self.gate.clocks),
-                "pushes": dict(self.pushes),
-                "blocked_rounds": self.blocked_rounds,
-                "max_clock_gap": self.max_gap,
-                "staleness": self.staleness}
+        stats = {"ps_ids": self.ps_ids,
+                 "ps_params": self._pull_flat(),
+                 "versions": dict(self._versions),
+                 "clocks": dict(self.gate.clocks),
+                 "pushes": dict(self.pushes),
+                 "blocked_rounds": self.blocked_rounds,
+                 "max_clock_gap": self.max_gap,
+                 "staleness": self.staleness}
+        if self.spec is not None:
+            stats["speculation"] = self.spec.stats()
+        return stats
 
     def wait(self):
         if self._ckpt is not None:

@@ -460,3 +460,118 @@ def test_ps_verbs_ride_the_registry():
     # the generic surface sees the identical shard
     reply = sim.role_call(3, "ps_pull")
     assert reply["version"] == 1
+
+
+# ---------------------------------------------------------------------------
+# speculative backup execution: cross-transport + failure injection
+# ---------------------------------------------------------------------------
+def _spec_sync(transport=None, trace=None, **over):
+    import tempfile
+
+    kw = dict(mode="sync", workers=4, steps=16, global_batch=32,
+              ckpt_every=5, straggle_threshold=0.0, spec_slack=1.5)
+    kw.update(over)
+    with tempfile.TemporaryDirectory() as d:
+        return run_elastic(ElasticProblem(), transport=transport,
+                           trace=trace, ckpt_dir=d, **kw)
+
+
+def _replay_captured(proc, tmp_path):
+    """Round-trip the proc run's observed trace through FailureTrace
+    JSON and replay it under SimTransport (the incident-replay flow)."""
+    p = tmp_path / "captured.json"
+    proc.captured_trace().save(str(p))
+    return _spec_sync(trace=FailureTrace.load(str(p)))
+
+
+def test_proc_speculative_backup_bit_identical_to_sim():
+    """A run that launches and WINS backups on both transports: the
+    backup role ledger lives in a real worker child under proc, yet
+    losses, transitions, sim_time, and the speculation counters are all
+    bit-identical to the in-process sim dispatch."""
+    trace = FailureTrace([TraceEvent(4, "slow", 2, 0.3)])
+    kw = dict(workers=3, steps=12, global_batch=24)
+    sim = _spec_sync(trace=trace, **kw)
+    proc = _spec_sync(transport=ProcTransport(inject=trace), **kw)
+    assert sim.mode_stats["speculation"]["won"] > 0
+    assert proc.mode_stats["speculation"] == sim.mode_stats["speculation"]
+    assert ([t.as_tuple() for t in proc.transitions] ==
+            [t.as_tuple() for t in sim.transitions])
+    assert proc.losses == sim.losses
+    assert proc.final_loss == sim.final_loss
+    assert proc.sim_time == sim.sim_time
+    assert proc.goodput == sim.goodput
+
+
+def test_proc_spec_backup_killed_primary_commits(tmp_path):
+    """Kill the BACKUP (helper host) mid-execution: the standing cover
+    dies with its host, so the straggler's own death would no longer be
+    covered — but the primary's results stand (no double apply: the
+    loss trajectory matches a speculation-free run of the same trace
+    exactly), and the helper's own death takes the normal restore
+    path.  Pinned via captured-trace JSON replay under sim."""
+    trace = FailureTrace([TraceEvent(4, "slow", 3, 0.3),   # straggler 3
+                          TraceEvent(8, "fail", 0)])       # helper dies
+    proc_t = ProcTransport(inject=trace)
+    proc = _spec_sync(transport=proc_t)
+    stats = proc.mode_stats["speculation"]
+    assert stats["won"] > 0                   # backups were winning
+    assert stats["covered_deaths"] == 0       # the STRAGGLER never died
+    # the helper's death is an ordinary sync failure: restore + rewind
+    assert [r.worker for r in proc.recoveries] == [0]
+    assert proc.recoveries[0].lost_steps > 0
+    # no double-apply: byte-identical losses to the same trace with
+    # speculation off (arbitration never touches the committed bytes)
+    plain = _spec_sync(trace=trace, spec_slack=None)
+    assert proc.losses == plain.losses
+    assert proc.final_loss == plain.final_loss
+    # incident replay: captured JSON -> sim, bit-identical
+    sim = _replay_captured(proc_t, tmp_path)
+    assert sim.losses == proc.losses
+    assert sim.mode_stats["speculation"] == stats
+    assert ([t.as_tuple() for t in sim.transitions] ==
+            [t.as_tuple() for t in proc.transitions])
+
+
+def test_proc_spec_primary_killed_backup_commits(tmp_path):
+    """Kill the PRIMARY after the backup launched (hang -> silence ->
+    timeout death): the backup's copy of the shard commits at every
+    barrier meanwhile, so the death is covered — no restore, no rewind,
+    lost_steps=0 — and the recovery machinery is untouched."""
+    trace = FailureTrace([TraceEvent(6, "hang", 2)])
+    proc_t = ProcTransport(inject=trace)
+    proc = _spec_sync(transport=proc_t)
+    stats = proc.mode_stats["speculation"]
+    assert stats["covered_deaths"] == 1
+    assert stats["won"] >= 1                  # suspect ETA=inf: backup wins
+    assert [r.worker for r in proc.recoveries] == [2]
+    assert proc.recoveries[0].lost_steps == 0
+    assert proc.recoveries[0].cause == "timeout"
+    sim = _replay_captured(proc_t, tmp_path)
+    assert sim.losses == proc.losses
+    assert sim.mode_stats["speculation"] == stats
+    assert [r.lost_steps for r in sim.recoveries] == [0]
+
+
+def test_proc_spec_both_killed_rewinds_to_floor(tmp_path):
+    """Kill primary AND backup in the same wall step: coverage is void
+    (the redundant copy died with its host), so normal sync recovery
+    rewinds to the commit floor — speculation degrades to exactly the
+    non-speculative failure path, never worse."""
+    trace = FailureTrace([TraceEvent(6, "hang", 2),     # straggler 2 ...
+                          TraceEvent(7, "fail", 0),     # helper dies
+                          TraceEvent(7, "fail", 2)])    # ... and so does 2
+    proc_t = ProcTransport(inject=trace)
+    proc = _spec_sync(transport=proc_t)
+    stats = proc.mode_stats["speculation"]
+    assert stats["covered_deaths"] == 0       # the cover was voided
+    assert sorted(r.worker for r in proc.recoveries) == [0, 2]
+    # both records rewind to the same commit floor (ckpt at step 5,
+    # death at train_step 7 -> 2 steps redone)
+    losts = {r.lost_steps for r in proc.recoveries}
+    assert len(losts) == 1 and losts.pop() > 0
+    sim = _replay_captured(proc_t, tmp_path)
+    assert sim.losses == proc.losses
+    assert sim.mode_stats["speculation"] == stats
+    assert ([r.lost_steps for r in sim.recoveries] ==
+            [r.lost_steps for r in proc.recoveries])

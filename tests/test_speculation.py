@@ -1,0 +1,243 @@
+"""Speculative backup execution (the survey's backup-task move).
+
+Three contracts:
+
+1. Arbitration can never change the committed bytes: a run where the
+   backup copy lands first is byte-identical (losses, final loss) to
+   the run where only the primary exists, and a run where speculation is
+   enabled but never fires is identical to a disabled run INCLUDING the
+   time/goodput accounting (hypothesis property over random
+   rate/slack/shard-size configurations via `_hyp_compat`).
+2. The `BackupLedger` is exactly-once under any message interleaving:
+   for a launched task, one resolution wins and every later commit /
+   cancel / duplicate launch is a refused no-op — the proc-transport
+   race-safety argument, exercised directly.
+3. The ETA model fires exactly when it should: SUSPECT workers always
+   (their ETA is unbounded), rate stragglers only past the slack and
+   only when the backup can actually win; a DBS-rebalanced split never
+   fires (speculation covers DBS's blind spots, not its territory).
+"""
+import math
+import tempfile
+
+import pytest
+
+from repro.cluster import Coordinator, SimTransport
+from repro.cluster.coordinator import Speculator
+from repro.cluster.roles import BackupLedger, dispatch
+from repro.elastic import (ElasticProblem, FailureTrace, TraceEvent,
+                           run_elastic)
+from repro.elastic.straggler import (BackupDecision, ThroughputMonitor,
+                                     plan_backup, predict_etas)
+
+from tests._hyp_compat import given, settings, st
+
+PROBLEM = ElasticProblem()
+
+
+def run_sync(trace, *, spec_slack=None, batch=24, steps=10, workers=4,
+             threshold=0.0):
+    with tempfile.TemporaryDirectory() as d:
+        return run_elastic(PROBLEM, mode="sync", workers=workers,
+                           steps=steps, global_batch=batch, trace=trace,
+                           ckpt_dir=d, ckpt_every=5,
+                           straggle_threshold=threshold,
+                           spec_slack=spec_slack)
+
+
+# ---------------------------------------------------------------------------
+# 1. arbitration order-invariance (the property)
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.floats(0.1, 0.45), st.floats(1.1, 2.0), st.integers(16, 32))
+def test_committed_result_invariant_to_arbitration_order(rate, slack,
+                                                         batch):
+    """For random (rate, slack, shard-size) configs: the run where the
+    backup lands first commits byte-identical results to the run where
+    the primary is the only copy, and enabled-but-never-fires is
+    indistinguishable from disabled — losses, final loss, sim_time AND
+    goodput."""
+    trace = FailureTrace([TraceEvent(3, "slow", 2, rate)])
+    base = run_sync(trace, batch=batch)                    # primary only
+    spec = run_sync(trace, spec_slack=slack, batch=batch)  # backup wins
+    stats = spec.mode_stats["speculation"]
+    # rate < 0.45 under a uniform split: the backup is always winnable
+    # and the ETA always blows the slack <= 2.0, so it must have fired
+    assert stats["launched"] > 0 and stats["won"] > 0
+    assert spec.losses == base.losses
+    assert spec.final_loss == base.final_loss
+    assert spec.sim_time <= base.sim_time     # a winning backup only helps
+    assert stats["wasted_rows"] > 0           # ... but is billed as waste
+
+    quiet = run_sync(trace, spec_slack=1e9, batch=batch)   # never fires
+    assert quiet.losses == base.losses
+    assert quiet.final_loss == base.final_loss
+    assert quiet.sim_time == base.sim_time
+    assert quiet.goodput == base.goodput
+    assert quiet.mode_stats["speculation"]["launched"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 9))
+def test_ledger_exactly_once_under_any_interleaving(seed):
+    """Shuffle commits/cancels/duplicate launches arbitrarily: exactly
+    one resolution ever succeeds, and the ledger state never moves
+    again afterwards — the no-double-apply invariant the proc
+    transport's real races lean on."""
+    import random
+
+    led = BackupLedger()
+    states = {"backup": led}
+    assert dispatch(states, {"v": "backup_launch", "task": "0:5:3",
+                             "rows": 8})["accepted"]
+    ops = (["backup_commit"] * 2 + ["backup_cancel"] * 2 +
+           ["backup_launch"])
+    random.Random(seed).shuffle(ops)
+    wins = discards = 0
+    for v in ops:
+        reply = dispatch(states, {"v": v, "task": "0:5:3", "rows": 8})
+        wins += int(bool(reply.get("won")))
+        discards += int(bool(reply.get("discarded")))
+        assert not reply.get("accepted")      # relaunch always refused
+    assert wins + discards == 1               # exactly one resolution
+    assert led.tasks["0:5:3"] == ("won" if wins else "discarded")
+    # late messages after resolution: all refused, state unchanged
+    assert not dispatch(states, {"v": "backup_commit",
+                                 "task": "0:5:3"})["won"]
+    assert not dispatch(states, {"v": "backup_cancel",
+                                 "task": "0:5:3"})["discarded"]
+    assert led.tasks["0:5:3"] == ("won" if wins else "discarded")
+
+
+def test_speculator_resolve_matches_arbitration_both_orders():
+    """Driver-side first-result-wins through the role verbs: when the
+    primary's ETA is earlier the backup is discarded, when the backup's
+    is earlier it commits — and either way the ledger holds exactly one
+    resolution for the task."""
+    for eta_p, eta_b, expect in ((4.0, 9.0, "primary"),
+                                 (9.0, 4.0, "backup"),
+                                 (4.0, 4.0, "primary")):   # tie -> primary
+        dec = BackupDecision(straggler=1, helper=0, rows=8,
+                             eta_primary=eta_p, eta_backup=eta_b)
+        assert dec.winner == expect
+        with Coordinator(SimTransport(FailureTrace()), 2) as c:
+            spec = Speculator(c)
+            assert spec.launch(dec, step=5)
+            won = spec.resolve(dec, step=5, winner=dec.winner)
+            assert won == (expect == "backup")
+            stats = c.transport.role_call(0, "backup_stats")
+            assert stats["tasks"] == 1
+            assert stats["won"] + stats["discarded"] == 1
+            assert spec.wasted_rows == 8      # the loser, whichever it was
+
+
+# ---------------------------------------------------------------------------
+# 2. the ETA model
+# ---------------------------------------------------------------------------
+def test_predict_etas_suspect_is_unbounded():
+    etas = predict_etas({0: 8, 1: 8}, {0: 1.0, 1: 1.0}, suspects=(1,))
+    assert etas[0] == 8.0 and math.isinf(etas[1])
+
+
+def test_plan_backup_fires_on_suspect_with_any_slack():
+    dec = plan_backup({0: 8, 1: 8, 2: 8}, {0: 1.0, 1: 1.0, 2: 1.0},
+                      slack=1e6, suspects=(2,))
+    assert dec is not None
+    assert dec.straggler == 2 and dec.helper == 0    # lowest-id tie-break
+    assert math.isinf(dec.eta_primary) and dec.eta_backup == 16.0
+    assert dec.winner == "backup"
+
+
+def test_plan_backup_respects_slack_and_refuses_hopeless():
+    split = {0: 8, 1: 8, 2: 8, 3: 8}
+    # balanced fleet: nobody past any slack > 1
+    assert plan_backup(split, {w: 1.0 for w in split}, slack=1.1) is None
+    # rate 0.6 blows a tight slack but the backup cannot win
+    # (2n = 16 > n/0.6 = 13.3): refused rather than launched hopelessly
+    rates = {0: 1.0, 1: 1.0, 2: 1.0, 3: 0.6}
+    assert plan_backup(split, rates, slack=1.2) is None
+    # rate 0.3 is winnable (16 < 26.7) and past the slack: fires
+    rates[3] = 0.3
+    dec = plan_backup(split, rates, slack=1.2)
+    assert dec is not None and dec.straggler == 3
+    assert dec.eta_backup < dec.eta_primary
+
+
+def test_plan_backup_silent_after_dbs_rebalance():
+    """Once DBS has resplit proportionally to rates, ETAs equalize and
+    speculation must not fire — the two mitigations never fight over
+    the same straggler."""
+    mon = ThroughputMonitor()
+    ids = (0, 1, 2, 3)
+    for w in ids:
+        mon.set_rate(w, 1.0)
+    mon.set_rate(3, 0.25)
+    with Coordinator(SimTransport(FailureTrace()), 4) as c:
+        c.monitor = mon
+        split, slow = c.plan_split(32, alive=ids)
+        assert slow == (3,)                   # DBS flagged and resplit
+        assert c.plan_backup(split, slack=1.2) is None
+
+
+def test_plan_backup_needs_a_healthy_helper():
+    assert plan_backup({0: 8, 1: 8}, {0: 1.0, 1: 1.0}, slack=1.0,
+                       suspects=(0, 1)) is None
+    assert plan_backup({0: 8}, {0: 0.1}, slack=1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# 3. mode semantics under speculation
+# ---------------------------------------------------------------------------
+def test_sync_covered_death_skips_rewind():
+    """A hang->timeout death whose shard was backup-covered at the
+    barrier loses nothing: no restore, lost_steps=0 — vs the baseline
+    run on the same trace, which rewinds to the checkpoint."""
+    trace = lambda: FailureTrace([TraceEvent(6, "hang", 2)])
+    base = run_sync(trace(), steps=16, batch=32, threshold=0.5)
+    spec = run_sync(trace(), spec_slack=1.5, steps=16, batch=32,
+                    threshold=0.5)
+    assert [r.lost_steps for r in base.recoveries] != [0]
+    assert [r.lost_steps for r in spec.recoveries] == [0]
+    stats = spec.mode_stats["speculation"]
+    assert stats["covered_deaths"] == 1
+    assert stats["won"] >= 1                  # suspect ETA=inf: backup wins
+    assert spec.goodput > base.goodput
+    # the post-death trajectory diverges (the baseline recomputed its
+    # rewound steps on the shrunken fleet), but both converge
+    assert spec.final_loss < 1.0 and base.final_loss < 1.0
+
+
+def test_ssp_speculation_keeps_staleness_bound_and_helps():
+    """A gate-blocked fast worker re-executes the straggler's step: the
+    staleness invariant still holds, blocked rounds drop, goodput rises,
+    and the duplicated work is billed as waste."""
+    trace = lambda: FailureTrace([TraceEvent(3, "slow", 1, 0.25)])
+    kw = dict(mode="ssp", staleness=1, workers=3, steps=14,
+              global_batch=24)
+    base = run_elastic(PROBLEM, trace=trace(), **kw)
+    spec = run_elastic(PROBLEM, trace=trace(), spec_slack=1.5, **kw)
+    assert spec.mode_stats["max_clock_gap"] <= 1
+    assert (spec.mode_stats["blocked_rounds"] <
+            base.mode_stats["blocked_rounds"])
+    assert spec.goodput > base.goodput
+    stats = spec.mode_stats["speculation"]
+    assert stats["won"] > 0 and stats["wasted_rows"] > 0
+
+
+def test_async_ps_ignores_the_knob():
+    """No barrier, no blocking — async_ps has nothing to speculate on;
+    the knob must be inert there."""
+    trace = lambda: FailureTrace([TraceEvent(3, "slow", 1, 0.25)])
+    kw = dict(mode="async_ps", workers=3, steps=12, global_batch=24)
+    base = run_elastic(PROBLEM, trace=trace(), **kw)
+    spec = run_elastic(PROBLEM, trace=trace(), spec_slack=1.5, **kw)
+    assert spec.losses == base.losses
+    assert spec.goodput == base.goodput
+    assert "speculation" not in spec.mode_stats
+
+
+def test_speculation_defaults_off():
+    """The knob's absence is the byte-identical zero-backup path: no
+    Speculator is even constructed (mode_stats stays empty for sync)."""
+    res = run_sync(FailureTrace([TraceEvent(3, "slow", 2, 0.3)]))
+    assert res.mode_stats == {}
