@@ -65,6 +65,14 @@ GATES = {
     "serving": [
         ("continuous.tput", DEFAULT_MIN_RATIO),
         ("speedup", DEFAULT_MIN_RATIO),
+        # KV migration on replica death: fraction of the re-prefill
+        # tokens the harvested pages avoid.  Deterministic (fixed trace,
+        # greedy decode), so drift = a real scheduler/harvest change.
+        ("migrate.prefill_savings_frac", DEFAULT_MIN_RATIO),
+        # lookup-draft acceptance on the repetitive stream is likewise
+        # deterministic; the >= 1.15x tokens/s floor itself is
+        # hard-asserted inside bench_serving.py's spec section
+        ("spec.accept_rate", DEFAULT_MIN_RATIO),
     ],
     "elastic_serving": [
         ("scenarios.free.goodput", DEFAULT_MIN_RATIO),
@@ -111,6 +119,13 @@ GATES = {
 ABS_GATES = {
     "multihost": [
         ("overhead.tput_ratio", 0.25),
+    ],
+    "serving": [
+        # the paged pool must pack the mixed-length stream to >= 0.9
+        # pool occupancy (vs 0.77 slot occupancy for the dense per-slot
+        # reservation) — deterministic page accounting, so an absolute
+        # floor, not a baseline ratio
+        ("paged.occupancy", 0.9),
     ],
 }
 

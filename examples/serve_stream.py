@@ -2,7 +2,16 @@
 pool and watch admission / eviction / backfill keep every slot busy.
 
   PYTHONPATH=src python examples/serve_stream.py
+  PYTHONPATH=src python examples/serve_stream.py --speculative
+
+--speculative re-runs the same stream through the draft-verify engine
+(`repro.serving.speculative.SpecDecodeEngine` with the model-free n-gram
+lookup draft): each round one wide verify dispatch emits a whole block of
+tokens — the accepted draft prefix plus the target's correction — and the
+outputs stay bit-identical to the plain engine's.
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -10,10 +19,10 @@ from repro.configs import get_config
 from repro.core import sharding as SH
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as MD
-from repro.serving import Request, ServeEngine
+from repro.serving import Request, ServeEngine, SpecDecodeEngine
 
 
-def main():
+def main(speculative: bool = False):
     cfg = get_config("qwen3-0.6b", smoke=True)
     if jax.default_backend() == "cpu":
         cfg = cfg.with_(param_dtype="float32", compute_dtype="float32")
@@ -35,7 +44,11 @@ def main():
               f"prompts {[len(r.prompt) for r in requests]}, "
               f"budgets {[r.max_new_tokens for r in requests]}")
 
-        engine = ServeEngine(params, cfg, num_slots=3, cache_len=32)
+        if speculative:
+            engine = SpecDecodeEngine(params, cfg, num_slots=3,
+                                      cache_len=36, spec_k=3)
+        else:
+            engine = ServeEngine(params, cfg, num_slots=3, cache_len=32)
         for r in requests:
             engine.submit(r)
         while not engine.scheduler.done:
@@ -55,7 +68,17 @@ def main():
         print(f"\noccupancy={st['occupancy']:.2f} over "
               f"{st['decode_ticks']} decode ticks "
               f"({st['generated_tokens']} tokens)")
+        if speculative:
+            print(f"speculative: {st['spec_rounds']} rounds, "
+                  f"accept_rate={st['accept_rate']:.2f}, "
+                  f"{st['tokens_per_round']:.2f} tokens/round "
+                  f"(sequential decode would need "
+                  f"{st['generated_tokens']} target dispatches)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify decoding with the n-gram lookup "
+                         "draft (bit-identical output)")
+    main(ap.parse_args().speculative)

@@ -246,13 +246,19 @@ class ServingDrainReadmit:
             prefix = self.emitted[rid]
             remaining = orig.max_new_tokens - len(prefix)
             assert remaining > 0, f"rid {rid} drained after completion"
+            # harvested KV (paged engines): the continuation carries the
+            # pages so the target replica installs them instead of
+            # re-prefilling the prefix.  A queued-but-unadmitted
+            # continuation drains with its seed still attached — keep it.
+            kv = d.kv if getattr(d, "kv", None) is not None \
+                else getattr(req, "kv_seed", None)
             if prefix:
                 prompt = np.concatenate([
                     np.asarray(orig.prompt, np.int32),
                     np.asarray(prefix, np.int32)])
                 cont = Request(rid=rid, prompt=prompt,
                                max_new_tokens=remaining, eos_id=orig.eos_id,
-                               extra_embeds=orig.extra_embeds)
+                               extra_embeds=orig.extra_embeds, kv_seed=kv)
             else:
                 cont = orig  # nothing delivered yet: re-admit verbatim
             self.readmitted += 1

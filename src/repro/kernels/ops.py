@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import nat_compress as _nc
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref as _ref
 
@@ -58,6 +59,23 @@ def nc_roundtrip(x, key):
 
 # re-export oracles for tests / fallbacks
 attention_ref = _ref.attention_ref
+paged_attention_ref = _ref.paged_attention_ref
 ssd_ref = _ref.ssd_ref
 nc_pack_ref = _ref.nc_pack_ref
 nc_unpack_ref = _ref.nc_unpack_ref
+
+
+@functools.partial(jax.jit, static_argnames=("logical_len",))
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+                    logical_len: Optional[int] = None) -> jax.Array:
+    """Paged decode attention through a block table.
+
+    q: (B,Hq,dh); k/v_pool: (Np,P,Hk,dh); block_tables: (B,n_max) int32;
+    pos: (B,) int32.  logical_len (static) crops the block table to
+    ceil(logical_len / P) pages — callers that size their tables past the
+    engine's cache_len don't pay for the dead pages."""
+    if logical_len is not None:
+        P = k_pool.shape[1]
+        block_tables = block_tables[:, :-(-logical_len // P)]
+    return _pa.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                               interpret=_interpret())

@@ -104,3 +104,31 @@ def nc_unpack_ref(bcode, dtype=jnp.float32) -> jax.Array:
     mag = jnp.where(code == 0, 0.0,
                     jnp.exp2((code - _BIAS).astype(jnp.float32)))
     return (sign * mag).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention decode oracle: block-table gather + masked softmax
+# ---------------------------------------------------------------------------
+def paged_attention_ref(q, k_pool, v_pool, block_tables, pos, *,
+                        scale=None) -> jax.Array:
+    """q: (B,Hq,dh) one decode token per row; k/v_pool: (Np,P,Hk,dh);
+    block_tables: (B,n_max) page ids; pos: (B,) — attend idx <= pos[b].
+
+    The gather+mask is the same math `models.attention.attention_decode`
+    runs in paged mode (minus projections), so this doubles as the
+    engine-side semantics the kernel must reproduce."""
+    B, Hq, dh = q.shape
+    Np, P, Hk, _ = k_pool.shape
+    G = Hq // Hk
+    C = block_tables.shape[1] * P
+    sc = scale if scale is not None else dh ** -0.5
+    k = k_pool[block_tables].reshape(B, C, Hk, dh)
+    v = v_pool[block_tables].reshape(B, C, Hk, dh)
+    qg = q.reshape(B, Hk, G, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32) * sc
+    valid = jnp.arange(C)[None, :] <= pos[:, None]          # (B,C)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Hq, dh).astype(q.dtype)

@@ -109,14 +109,34 @@ def _serve_static(params, cfg, args):
 
 def _serve_continuous(params, cfg, args):
     from repro.serving import ServeEngine
+    from repro.serving.speculative import (LookupDraft, ModelDraft,
+                                           SpecDecodeEngine)
 
     # drawn lengths never exceed the CLI bounds: cache_len = S + G must
     # hold the longest prompt plus the largest generation budget
     S, G = args.prompt_len, args.gen
     reqs = _make_stream(cfg, args)
     n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
-    engine = ServeEngine(params, cfg, num_slots=args.batch,
-                         cache_len=S + G + n_prefix)
+    cache_len = S + G + n_prefix
+    paged = dict(page_size=args.page_size,
+                 num_pages=args.num_pages) if args.paged else {}
+    if args.speculative:
+        if args.draft_arch:
+            dcfg = get_config(args.draft_arch, smoke=args.smoke)
+            if jax.default_backend() == "cpu":
+                dcfg = dcfg.with_(param_dtype="float32",
+                                  compute_dtype="float32")
+            dparams = jax.jit(lambda k: MD.init_model(dcfg, k))(
+                jax.random.PRNGKey(args.seed + 7))
+            draft = ModelDraft(dparams, dcfg)
+        else:
+            draft = LookupDraft()
+        engine = SpecDecodeEngine(params, cfg, num_slots=args.batch,
+                                  cache_len=cache_len + args.spec_k,
+                                  draft=draft, spec_k=args.spec_k, **paged)
+    else:
+        engine = ServeEngine(params, cfg, num_slots=args.batch,
+                             cache_len=cache_len, **paged)
 
     t0 = time.time()
     finished = engine.run(reqs)
@@ -130,6 +150,17 @@ def _serve_continuous(params, cfg, args):
           f"occupancy={st['occupancy']:.2f}  "
           f"ticks={st['ticks']} (prefill {st['prefill_ticks']}, "
           f"decode {st['decode_ticks']})")
+    if args.paged:
+        print(f"paged: page_size={engine.page_size} "
+              f"pages={engine.num_pages} "
+              f"pool_occupancy={st['pool_occupancy']:.2f} "
+              f"preemptions={st['preemptions']}")
+    if args.speculative:
+        print(f"speculative: k={args.spec_k} "
+              f"draft={'model:' + args.draft_arch if args.draft_arch else 'lookup'} "
+              f"rounds={st['spec_rounds']} "
+              f"accept_rate={st['accept_rate']:.2f} "
+              f"tokens/round={st['tokens_per_round']:.2f}")
     print("sample generation (first request):",
           finished[0].tokens[:16])
     return {"finished": finished, "stats": st, "t_total": dt}
@@ -166,7 +197,10 @@ def _serve_fleet(params, cfg, args):
                        num_slots=args.batch,
                        cache_len=args.prompt_len + args.gen + n_prefix,
                        trace=None if transport else trace,
-                       transport=transport)
+                       transport=transport,
+                       page_size=args.page_size if args.paged else None,
+                       num_pages=args.num_pages if args.paged else None,
+                       hedged_decode=args.hedged)
     reqs = _make_stream(cfg, args)
     t0 = time.time()
     try:
@@ -205,6 +239,29 @@ def serve(argv=None) -> dict:
                          "replica")
     ap.add_argument("--requests", type=int, default=16,
                     help="--continuous/--replicas: requests in the stream")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache pool: slots share fixed-size "
+                         "pages instead of reserving max-length rows")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--paged: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="--paged: pool pages (default: worst-case "
+                         "slots x ceil(cache_len/page_size))")
+    ap.add_argument("--speculative", action="store_true",
+                    help="--continuous: draft-verify decoding "
+                         "(repro.serving.speculative); bit-identical "
+                         "output, fewer target dispatches")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="--speculative: draft tokens per round")
+    ap.add_argument("--draft-arch", default=None,
+                    help="--speculative: config-zoo arch drafting for "
+                         "--arch (e.g. qwen3-0.6b for qwen3-1.7b); "
+                         "default: model-free n-gram lookup draft")
+    ap.add_argument("--hedged", action="store_true",
+                    help="--replicas: hedged decode — SUSPECT replicas "
+                         "keep serving while a speculative continuation "
+                         "races them on a healthy replica "
+                         "(first-token-wins)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)

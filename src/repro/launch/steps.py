@@ -174,6 +174,23 @@ def make_serve_cb_step(cfg: ModelConfig) -> Callable:
     return serve_cb_step
 
 
+def make_paged_serve_cb_step(cfg: ModelConfig, logical_len: int) -> Callable:
+    """Paged-pool variant of the continuous-batching tick: the cache's KV
+    leaves are a shared page pool and each slot reads/writes through its
+    block-table row.  logical_len is the dense cache_len the pool replaces
+    (static: it bounds the gathered view)."""
+    def serve_cb_paged_step(params, cache, tokens, pos, active,
+                            block_tables):
+        logits, new_cache = MD.decode_step(params, cfg, tokens, pos, cache,
+                                           active=active,
+                                           block_tables=block_tables,
+                                           logical_len=logical_len)
+        nxt = sharded_argmax(logits[:, -1])[:, None]
+        nxt = jnp.where(active[:, None], nxt, tokens)
+        return nxt, new_cache
+    return serve_cb_paged_step
+
+
 # ---------------------------------------------------------------------------
 # Lowering plans (used by dryrun.py, train.py, serve.py)
 # ---------------------------------------------------------------------------

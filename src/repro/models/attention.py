@@ -181,8 +181,37 @@ def kv_cache_specs(cfg: ModelConfig, batch: int, cache_len: int, layers: int,
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        layers: int, dtype=jnp.bfloat16):
+    shape = (layers, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_kv_cache_specs(cfg: ModelConfig, num_pages: int, page_size: int,
+                         layers: int, dtype=jnp.bfloat16):
+    shape = (layers, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def _paged_gather(pool, bt, C):
+    """pool: (Np,P,Hk,dh); bt: (B,n_max) page ids -> (B,C,Hk,dh) view.
+
+    The gathered view is bit-identical to a dense (B,C) cache on every
+    position < the row's logical length: page j of row b holds positions
+    [j*P, (j+1)*P).  Positions beyond the logical length read whatever the
+    page holds (zeros or a previous tenant's KV) — callers mask them with
+    NEG_INF, which underflows softmax to an exact 0.0, so stale pages can
+    never perturb the output (the bit-identity argument the paged engine
+    rests on)."""
+    B = bt.shape[0]
+    Hk, dh = pool.shape[2], pool.shape[3]
+    return pool[bt].reshape(B, -1, Hk, dh)[:, :C]
+
+
 def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
-                     *, encoder_kv_cache=None, active=None):
+                     *, encoder_kv_cache=None, active=None,
+                     block_tables=None, logical_len=None):
     """x: (B,1,d); cache_k/v: (B,C,Hk,dh); pos: () int32 current length,
     or (B,) int32 — one position per batch row, so slots of a continuous-
     batching pool can each decode at their own offset.
@@ -191,14 +220,25 @@ def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
     retired pool slots — their cache write is DROPPED (scatter to an out-of-
     bounds row with mode="drop"), so a no-op costs nothing extra.
 
+    block_tables: optional (B, n_max) int32 — PAGED mode: cache_k/v are a
+    shared page pool (Np, P, Hk, dh) and row b's position q lives in
+    pool[block_tables[b, q // P], q % P].  logical_len bounds the gathered
+    view (static; = the dense cache_len it replaces).  Requires vector pos;
+    ring buffers (sliding window) do not compose with paging.
+
     Returns (y, new_cache_k, new_cache_v).  With a sliding window the cache
     is a ring buffer of size C=window; otherwise C >= pos+1.
     """
     B, _, _ = x.shape
-    C = cache_k.shape[1]
+    paged = block_tables is not None
+    C = logical_len if paged else cache_k.shape[1]
     ring = cfg.attention_kind == "sliding_window"
+    if paged and ring:
+        raise ValueError("paged KV does not support sliding-window caches")
     pos = jnp.asarray(pos, jnp.int32)
     per_row = pos.ndim == 1
+    if paged and not per_row:
+        raise ValueError("paged KV requires a per-row pos vector")
     pos_b = pos if per_row else jnp.broadcast_to(pos, (B,))  # (B,)
     positions = pos_b[:, None]
     if encoder_kv_cache is not None:
@@ -209,6 +249,24 @@ def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
         valid = jnp.ones((B, k.shape[1]), bool)
         cache_k, cache_v = cache_k, cache_v  # untouched
         new_k, new_v = cache_k, cache_v
+    elif paged:
+        q, k1, v1 = _project_qkv(p, x, positions, cfg)
+        Np, P = cache_k.shape[0], cache_k.shape[1]
+        page = jnp.take_along_axis(block_tables, (pos_b // P)[:, None],
+                                   axis=1)[:, 0]  # (B,) physical page ids
+        if active is not None:
+            page = jnp.where(active, page, Np)  # OOB -> write dropped
+        new_k = cache_k.at[page, pos_b % P].set(k1[:, 0], mode="drop")
+        new_v = cache_v.at[page, pos_b % P].set(v1[:, 0], mode="drop")
+        if cfg.use_paged_kernel:
+            from repro.kernels import ops as K
+            out = K.paged_attention(q[:, 0], new_k, new_v, block_tables,
+                                    pos_b, logical_len=C)[:, None]
+            y = dense(out.reshape(B, 1, -1), p["wo"])
+            return shard(y, "batch", None, None), new_k, new_v
+        k = _paged_gather(new_k, block_tables, C)
+        v = _paged_gather(new_v, block_tables, C)
+        valid = jnp.arange(C)[None, :] <= pos_b[:, None]  # (B,C)
     else:
         q, k1, v1 = _project_qkv(p, x, positions, cfg)
         slot = jnp.mod(pos, C) if ring else pos
@@ -235,4 +293,57 @@ def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, v)
     y = dense(out.reshape(B, 1, -1), p["wo"])
+    return shard(y, "batch", None, None), new_k, new_v
+
+
+def attention_verify(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     *, active=None, block_tables=None, logical_len=None):
+    """Draft-verify attention: S candidate tokens per row in ONE pass.
+
+    x: (B,S,d) — row b's tokens sit at positions pos[b] .. pos[b]+S-1.
+    Writes all S keys/values (query i attends the cache plus candidates
+    0..i, exactly what S sequential `attention_decode` calls would see),
+    so the verifier's logits match sequential decode and acceptance is
+    deterministic.  Rejected candidates leave stale KV beyond the accepted
+    prefix; the next round overwrites positions pos'..pos'+S-1 before any
+    query can see them (pos' <= pos + S), so no rollback write is needed —
+    rolling back IS just not advancing `pos`.
+
+    Dense cache (B,C,Hk,dh) or paged pool + block_tables, as in
+    `attention_decode`.  Returns (y (B,S,d), new_k, new_v)."""
+    B, S, _ = x.shape
+    paged = block_tables is not None
+    C = logical_len if paged else cache_k.shape[1]
+    if cfg.attention_kind == "sliding_window":
+        raise ValueError("attention_verify: sliding-window caches "
+                         "unsupported")
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim != 1:
+        raise ValueError("attention_verify requires a per-row pos vector")
+    qpos = pos[:, None] + jnp.arange(S)[None, :]  # (B,S) global positions
+    q, k1, v1 = _project_qkv(p, x, qpos, cfg)
+    if paged:
+        Np, P = cache_k.shape[0], cache_k.shape[1]
+        page = jnp.take_along_axis(block_tables, qpos // P, axis=1)  # (B,S)
+        if active is not None:
+            page = jnp.where(active[:, None], page, Np)
+        new_k = cache_k.at[page, qpos % P].set(k1, mode="drop")
+        new_v = cache_v.at[page, qpos % P].set(v1, mode="drop")
+        k = _paged_gather(new_k, block_tables, C)
+        v = _paged_gather(new_v, block_tables, C)
+    else:
+        rows = jnp.arange(B)[:, None]
+        slot = qpos
+        if active is not None:
+            slot = jnp.where(active[:, None], slot, C)  # OOB -> dropped
+        new_k = cache_k.at[rows, slot].set(k1, mode="drop")
+        new_v = cache_v.at[rows, slot].set(v1, mode="drop")
+        k, v = new_k, new_v
+    valid = jnp.arange(C)[None, None, :] <= qpos[:, :, None]  # (B,S,C)
+    q = shard(q, "batch", None, "model", None)
+    scores = _gqa_scores(q, k, cfg)  # (B,Hk,G,S,C)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v)
+    y = dense(out.reshape(B, S, -1), p["wo"])
     return shard(y, "batch", None, None), new_k, new_v

@@ -38,6 +38,9 @@ class ModelConfig:
     # use the Pallas flash-attention kernel (kernels/flash_attention.py)
     # for batched attention: Mosaic on TPU, interpret mode elsewhere.
     use_flash_kernel: bool = False
+    # use the Pallas paged-attention kernel (kernels/paged_attention.py)
+    # for block-table decode reads in attention_decode.
+    use_paged_kernel: bool = False
     # value used by serve_step for the decode KV cache length; overridden by
     # the input shape at lowering time.
     max_cache_len: int = 2048

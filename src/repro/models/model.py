@@ -299,7 +299,7 @@ def _gate_rows(active, new, old):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
-                active=None):
+                active=None, block_tables=None, logical_len=None):
     """tokens: (B,1) int32; pos: () int32 current sequence length, or (B,)
     int32 — one position per batch row (continuous batching: every slot of
     the pool decodes at its own offset).
@@ -309,11 +309,19 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
     writes are dropped in-place, recurrent-state rows keep their old
     value), so a pool can keep ticking while a slot waits for backfill.
 
+    block_tables: optional (B, n_max) int32 — PAGED mode: the cache's KV
+    leaves (`paged_leaf_names`) are shared page pools (stack, Np, P, Hk,
+    dh) and row b reads/writes through its block table; every other leaf
+    (audio cross-KV, hybrid recurrent state) stays per-slot.  logical_len
+    is the static dense cache_len the pool replaces.
+
     Returns (logits (B,1,V), new cache)."""
     at = cfg.arch_type
     B = tokens.shape[0]
     if active is not None and jnp.asarray(pos).ndim != 1:
         raise ValueError("active mask requires a per-row pos vector")
+    if block_tables is not None and at == "ssm":
+        raise ValueError("arch_type ssm has no KV cache to page")
     x = jnp.take(params["embed"], tokens, axis=0).astype(
         jnp.dtype(cfg.compute_dtype))
     x = shard(x, "batch", None, None)
@@ -328,7 +336,9 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
                 xk = xv = None
             pre = rms_norm(h, lp["ln1"], cfg.norm_eps)
             y, nk, nv = A.attention_decode(lp["attn"], pre, ck, cv, pos, cfg,
-                                           active=active)
+                                           active=active,
+                                           block_tables=block_tables,
+                                           logical_len=logical_len)
             h = h + y
             if at == "audio":
                 hc = rms_norm(h, lp["lnc"], cfg.norm_eps)
@@ -352,7 +362,9 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
 
     elif at == "hybrid":
         x, new_cache = _decode_hybrid(params, cfg, x, pos, cache,
-                                      active=active)
+                                      active=active,
+                                      block_tables=block_tables,
+                                      logical_len=logical_len)
     elif at == "ssm":
         def body(h, xs):
             lp, st = xs
@@ -371,7 +383,8 @@ def decode_step(params, cfg: ModelConfig, tokens, pos, cache, *,
     return shard(logits, "batch", None, "model"), new_cache
 
 
-def _decode_hybrid(params, cfg, x, pos, cache, *, active=None):
+def _decode_hybrid(params, cfg, x, pos, cache, *, active=None,
+                   block_tables=None, logical_len=None):
     k_every = cfg.hybrid_attn_every
     shared = params["shared"]
 
@@ -392,7 +405,9 @@ def _decode_hybrid(params, cfg, x, pos, cache, *, active=None):
             h, sk, sv = args
             pre = rms_norm(h, shared["ln1"], cfg.norm_eps)
             y, nk, nv = A.attention_decode(shared["attn"], pre, sk, sv, pos,
-                                           cfg, active=active)
+                                           cfg, active=active,
+                                           block_tables=block_tables,
+                                           logical_len=logical_len)
             h = h + y
             pre2 = rms_norm(h, shared["ln2"], cfg.norm_eps)
             h = h + M.mlp(shared["mlp"], pre2, cfg)
@@ -415,6 +430,52 @@ def _decode_hybrid(params, cfg, x, pos, cache, *, active=None):
     new_cache = {"ssm": nst, "conv": nconv,
                  "sk": nsk[idxs], "sv": nsv[idxs]}
     return x, new_cache
+
+
+def verify_step(params, cfg: ModelConfig, tokens, pos, cache, *,
+                active=None, block_tables=None, logical_len=None):
+    """Speculative-decoding verify: score S candidate tokens per row in one
+    fused pass.  tokens: (B,S) int32 — row b's candidates occupy positions
+    pos[b] .. pos[b]+S-1; logits[:, i] is the model's next-token
+    distribution after candidate i, bit-matching what S sequential
+    `decode_step` calls would produce (same reductions over the same
+    arrays), which is what makes greedy accept/reject exact.
+
+    Supports the attention-only decoder families (dense/vlm/moe): the
+    recurrent families (hybrid/ssm) would need state snapshots to roll
+    back, not just a position register.
+
+    Returns (logits (B,S,V), new cache)."""
+    at = cfg.arch_type
+    if at not in ("dense", "vlm", "moe"):
+        raise ValueError(f"verify_step: unsupported arch_type {at}")
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x = shard(x, "batch", None, None)
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, ck, cv = xs
+        pre = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        y, nk, nv = A.attention_verify(lp["attn"], pre, ck, cv, pos, cfg,
+                                       active=active,
+                                       block_tables=block_tables,
+                                       logical_len=logical_len)
+        h = h + y
+        pre2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if at == "moe":
+            y2, a = M.moe(lp["moe"], pre2, cfg)
+            h, aux = h + y2, aux + a
+        else:
+            h = h + M.mlp(lp["mlp"], pre2, cfg)
+        return (h, aux), (nk, nv)
+
+    (x, _), (nk, nv) = _scan(cfg, body, (x, jnp.zeros((), jnp.float32)),
+                             (params["blocks"], cache["k"], cache["v"]))
+    new_cache = dict(cache, k=nk, v=nv)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense(x, params["lm_head"])
+    return shard(logits, "batch", None, "model"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +510,67 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
     return jax.tree_util.tree_map(
         lambda s: jnp.zeros(s.shape, s.dtype),
         cache_specs(cfg, batch, cache_len))
+
+
+def paged_leaf_names(cfg: ModelConfig) -> tuple:
+    """Cache leaves that page (position-indexed KV); everything else —
+    audio cross-KV (fixed encoder length), hybrid SSM/conv state, RWKV
+    state — stays a per-slot batch row."""
+    at = cfg.arch_type
+    if at in ("dense", "vlm", "moe", "audio"):
+        return ("k", "v")
+    if at == "hybrid":
+        return ("sk", "sv")
+    return ()
+
+
+def paged_cache_specs(cfg: ModelConfig, num_slots: int, num_pages: int,
+                      page_size: int):
+    """Like `cache_specs`, but KV leaves become shared page pools
+    (stack, num_pages, page_size, Hk, dh): capacity is governed by tokens
+    actually resident, not slots x worst-case length."""
+    if cfg.attention_kind == "sliding_window":
+        raise ValueError("paged KV does not support sliding-window caches")
+    names = paged_leaf_names(cfg)
+    if not names:
+        raise ValueError(f"arch_type {cfg.arch_type} has no KV to page")
+    sp = dict(cache_specs(cfg, num_slots, page_size))
+    cdt = jnp.dtype(cfg.compute_dtype)
+    for n in names:
+        stack = sp[n].shape[0]
+        sp[n] = jax.ShapeDtypeStruct(
+            (stack, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim),
+            cdt)
+    return sp
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_cache_specs(cfg, num_slots, num_pages, page_size))
+
+
+def write_paged_cache(pool_cache, request_cache, slot, page_ids, cfg):
+    """Install one request's B=1 prefill cache into a paged pool: KV
+    leaves (prefilled to a page multiple) scatter whole pages onto the
+    `page_ids` rows of the shared pool; per-slot leaves scatter batch row
+    `slot` as in `write_cache_slot`."""
+    names = set(paged_leaf_names(cfg))
+    npg = page_ids.shape[0]
+    new = {}
+    for name, pool in pool_cache.items():
+        one = request_cache[name]
+        if name in names:
+            stack, _, P = pool.shape[:3]
+            pages = one[:, 0].reshape((stack, npg, P) + pool.shape[3:])
+            new[name] = pool.at[:, page_ids].set(pages.astype(pool.dtype))
+        else:
+            # per-slot leaves may themselves be trees (hybrid conv ring)
+            new[name] = jax.tree_util.tree_map(
+                lambda p, o: p.at[:, slot].set(o[:, 0].astype(p.dtype)),
+                pool, one)
+    return new
 
 
 def write_cache_slot(pool_cache, request_cache, slot):

@@ -17,12 +17,16 @@ class Request:
     eos_id: stop token; None = run to the budget
     extra_embeds: optional modality-frontend output for vlm/audio backbones,
         batch dim 1: (1, P, 1024) patches or (1, T_enc, d_model) frames
+    kv_seed: optional harvested KV (`serving.engine.MigratedKV`) attached
+        by the drain/readmit path — a paged engine installs these pages
+        instead of re-prefilling the prompt (zero prefill on re-admit)
     """
     rid: int
     prompt: Any
     max_new_tokens: int
     eos_id: Optional[int] = None
     extra_embeds: Optional[Any] = None
+    kv_seed: Optional[Any] = None
 
 
 def validate_budget(req: "Request", n_prefix: int, cache_len: int) -> None:

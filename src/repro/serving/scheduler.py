@@ -10,7 +10,7 @@ between "this request finished" and "that request starts").
 from __future__ import annotations
 
 import collections
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -47,6 +47,46 @@ class SlotPool:
     @property
     def num_active(self) -> int:
         return int(self.active.sum())
+
+
+class PagePool:
+    """Host-side allocator for the shared paged KV pool.
+
+    Free pages are handed out lowest-id-first and returned to sorted
+    order, so the page layout is a pure function of the admit/release
+    history — what keeps paged runs replayable and the migration tests
+    byte-exact.  Pages are owned by slots; `owned[slot]` is in POSITION
+    order (entry j backs logical positions [j*P, (j+1)*P))."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(num_pages))
+        self.owned: Dict[int, List[int]] = {}
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self.free)
+
+    def alloc(self, slot: int, n: int) -> Optional[List[int]]:
+        """Extend `slot`'s table by n pages; None if the pool is short."""
+        if n > len(self.free):
+            return None
+        got, self.free = self.free[:n], self.free[n:]
+        self.owned.setdefault(slot, []).extend(got)
+        return got
+
+    def release(self, slot: int) -> List[int]:
+        pages = self.owned.pop(slot, [])
+        self.free = sorted(self.free + pages)
+        return pages
 
 
 class FifoScheduler:

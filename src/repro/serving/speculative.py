@@ -1,0 +1,309 @@
+"""Speculative draft–verify decoding on the slot-pool engine.
+
+Greedy decode emits one token per model dispatch — the sequential
+bottleneck continuous batching cannot touch (it batches ACROSS requests,
+not along a request).  Speculative decoding attacks the per-request
+critical path: a cheap **drafter** proposes k tokens, the target model
+scores all k+1 positions in ONE wide dispatch (`model.verify_step`, the
+same per-slot `pos` vectors and active masks the serve tick uses), and
+the engine accepts the longest prefix on which the target's own greedy
+choices agree with the draft, plus the target's correction token at the
+first disagreement.  Greedy acceptance is exact: every emitted token is
+the target's argmax at its position, so the output stream is BIT-IDENTICAL
+to non-speculative decoding — the draft can only change how many dispatches
+the stream costs, never its contents.
+
+Two drafters:
+
+* `LookupDraft` — model-free n-gram lookup over the request's own
+  prompt + generated history (longest-suffix match, falling back to
+  repeat-last).  Free to propose, and surprisingly effective on the
+  repetitive tails greedy decode produces; this is the drafter the
+  serving bench gates (`spec.accept_rate`, tokens/s >= the sequential
+  engine).
+* `ModelDraft` — a small model from the same config zoo drafting for a
+  large one (e.g. qwen3-0.6b for qwen3-1.7b; any pair sharing a vocab).
+  The draft runs its own dense slot cache in lockstep with the pool:
+  accepted positions hold draft KV that matches what the draft itself
+  proposed (accepted means draft == target), and the rejected tail is
+  overwritten by the next round's scan, so no separate reconciliation
+  pass is needed.
+
+Rollback is a register update, not a cache operation: the verify pass
+writes KV for all k+1 candidate positions, and a rejection simply leaves
+`pos` pointing below the garbage — which the next round's writes cover
+again (writes advance at least one position per round) and attention
+masks out meanwhile (`attention_verify` masks by true position, and in
+paged mode stale page contents underflow softmax to an exact zero).
+The same invariant the paged engine relies on makes speculation
+drain/migration-safe: at every round boundary KV is exact below `pos`,
+so `harvest_kv` and re-admission work unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import sharded_argmax
+from repro.models import model as MD
+from repro.serving.engine import ServeEngine
+from repro.serving.request import Request, validate_budget
+
+
+class LookupDraft:
+    """Model-free drafter: propose the continuation that followed the most
+    recent earlier occurrence of the current suffix (n-gram lookup with
+    n = max_n..1, repeat-last fallback).  Host-side and O(history) per
+    proposal — the draft costs no device dispatch at all."""
+
+    def __init__(self, max_n: int = 3):
+        self.max_n = max_n
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        ctx = list(ctx)
+        out = []
+        for _ in range(k):
+            nxt = None
+            for n in range(min(self.max_n, len(ctx) - 1), 0, -1):
+                key = tuple(ctx[-n:])
+                for i in range(len(ctx) - n - 1, -1, -1):
+                    if tuple(ctx[i:i + n]) == key:
+                        nxt = ctx[i + n]
+                        break
+                if nxt is not None:
+                    break
+            if nxt is None:
+                nxt = ctx[-1]
+            out.append(int(nxt))
+            ctx.append(nxt)
+        return out
+
+
+class ModelDraft:
+    """Draft with a smaller model over the same vocabulary.  Holds the
+    (params, cfg) pair; the engine owns the draft's slot cache and runs
+    the k-step draft scan / per-request draft prefill built here."""
+
+    def __init__(self, params, cfg):
+        self.params = params
+        self.cfg = cfg
+
+
+class SpecDecodeEngine(ServeEngine):
+    """ServeEngine whose decode step is a draft–verify round.
+
+    Each round replaces up to `spec_k + 1` sequential pool ticks with one
+    wide verify dispatch (plus the draft's cost: zero for LookupDraft,
+    `spec_k` small-model ticks for ModelDraft).  Emissions per round per
+    slot: 1 (the guaranteed correction/bonus token) + the accepted draft
+    prefix, truncated on device by the slot's remaining budget and by the
+    first EOS — the device retirement rule generalized from one token per
+    tick to a variable-length block per round.
+
+    Output identity with the sequential engine holds bit-for-bit (greedy
+    acceptance); `tests/test_speculative.py` asserts it for both drafters
+    and across drain/readmit."""
+
+    def __init__(self, params, cfg, *, draft=None, spec_k: int = 3, **kw):
+        if cfg.arch_type not in ("dense", "vlm", "moe"):
+            raise ValueError(f"speculative decoding needs a pure-attention "
+                             f"cache (dense/vlm/moe), got {cfg.arch_type}")
+        if spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
+        self.spec_k = spec_k
+        self.draft = draft if draft is not None else LookupDraft()
+        if isinstance(self.draft, ModelDraft):
+            if self.draft.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {self.draft.cfg.vocab_size} != target "
+                    f"vocab {cfg.vocab_size}: draft proposals must be "
+                    f"target tokens")
+        self._round_fn = None
+        self._draft_scan_fn = None
+        self._draft_admit_fn = None
+        super().__init__(params, cfg, **kw)
+
+    def reset(self) -> None:
+        super().reset()
+        if isinstance(self.draft, ModelDraft):
+            self.draft_cache = MD.init_cache(self.draft.cfg,
+                                             self.num_slots, self.cache_len)
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+
+    def submit(self, req: Request) -> None:
+        # verify writes KV at pos..pos+spec_k even when it emits only one
+        # token, so every slot needs spec_k positions of headroom beyond
+        # the sequential budget
+        validate_budget(req, self.n_prefix, self.cache_len - self.spec_k)
+        self.scheduler.submit(req)
+
+    # -- compiled pieces -----------------------------------------------
+    def _round(self):
+        if self._round_fn is not None:
+            return self._round_fn
+        cfg, C, paged = self.cfg, self.cache_len, self.paged
+        S = self.spec_k + 1
+
+        def round_fn(params, cache, tokens, pos, active, gen, maxgen, eos,
+                     props, block_tables=None):
+            vtok = jnp.concatenate([tokens, props], axis=1)       # (B, S)
+            logits, cache = MD.verify_step(
+                params, cfg, vtok, pos, cache, active=active,
+                block_tables=block_tables,
+                logical_len=C if paged else None)
+            outs = sharded_argmax(logits)                         # (B, S)
+            # accept the agreeing prefix + the target's correction token
+            match = (props == outs[:, :-1]).astype(jnp.int32)
+            m_raw = 1 + jnp.cumprod(match, axis=1).sum(axis=1)
+            m_bud = jnp.minimum(m_raw, jnp.maximum(maxgen - gen, 0))
+            iota = jnp.arange(S)
+            first_eos = jnp.min(
+                jnp.where(outs == eos[:, None], iota[None, :], S), axis=1)
+            m_eff = jnp.minimum(m_bud, first_eos + 1)
+            m_eff = jnp.where(active, m_eff, 0)
+            emit = iota[None, :] < m_eff[:, None]
+            # (S, B) blocks in the layout _consume already reads
+            T = jnp.where(emit, outs, 0).T
+            A = emit.T
+            last = jnp.take_along_axis(
+                outs, jnp.maximum(m_eff - 1, 0)[:, None], axis=1)
+            tokens = jnp.where(active[:, None], last, tokens)
+            pos = pos + m_eff
+            gen = gen + m_eff
+            fin = active & ((first_eos < m_eff) | (gen >= maxgen))
+            return tokens, cache, pos, active & ~fin, gen, T, A, m_eff
+
+        self._round_fn = jax.jit(round_fn, donate_argnums=(1,))
+        return self._round_fn
+
+    def _draft_scan(self):
+        if self._draft_scan_fn is not None:
+            return self._draft_scan_fn
+        dcfg, k = self.draft.cfg, self.spec_k
+
+        def scan_fn(dparams, dcache, tokens, pos, active):
+            def body(carry, _):
+                tok, cache, p = carry
+                logits, cache = MD.decode_step(dparams, dcfg, tok, p,
+                                               cache, active=active)
+                nxt = sharded_argmax(logits[:, -1])[:, None]
+                nxt = jnp.where(active[:, None], nxt, tok)
+                return (nxt, cache, p + active), nxt[:, 0]
+
+            # k + 1 steps for k proposals: the last step consumes the
+            # k-th proposal only to WRITE its KV (its output is dropped).
+            # On a full-accept round the target advances k+1 positions,
+            # so without that write position pos+k would stay a hole in
+            # the draft cache that every later round attends over; on a
+            # rejection round the extra write is stale but is overwritten
+            # by the next scan exactly when it first becomes attendable.
+            (_, dcache, _), props = jax.lax.scan(
+                body, (tokens, dcache, pos), None, length=k + 1)
+            return props[:k].T, dcache                           # (B, k)
+
+        self._draft_scan_fn = jax.jit(scan_fn, donate_argnums=(1,))
+        return self._draft_scan_fn
+
+    def _draft_admit(self):
+        if self._draft_admit_fn is not None:
+            return self._draft_admit_fn
+        dcfg, C = self.draft.cfg, self.cache_len
+
+        def admit_fn(dparams, prompt, extra, dcache, slot):
+            _, _, req_cache = MD.forward(dparams, dcfg, prompt,
+                                         extra_embeds=extra,
+                                         return_cache=True, cache_len=C)
+            return MD.write_cache_slot(dcache, req_cache, slot)
+
+        self._draft_admit_fn = jax.jit(admit_fn, donate_argnums=(3,))
+        return self._draft_admit_fn
+
+    # -- engine overrides ----------------------------------------------
+    def _admit(self, req: Request, slot: int) -> None:
+        super()._admit(req, slot)
+        if isinstance(self.draft, ModelDraft) and req.kv_seed is None:
+            prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+            self.draft_cache = self._draft_admit()(
+                self.draft.params, prompt, req.extra_embeds,
+                self.draft_cache, jnp.int32(slot))
+        # a migrated admit leaves the draft's slot cache cold (zeros): the
+        # draft's guesses start out uninformed, the verifier stays exact
+
+    def _propose(self) -> jax.Array:
+        """(B, spec_k) int32 draft tokens for every slot (inactive rows
+        are don't-cares: the round masks them out)."""
+        if isinstance(self.draft, ModelDraft):
+            props, self.draft_cache = self._draft_scan()(
+                self.draft.params, self.draft_cache, self.tokens,
+                self.pos_d, self.active_d)
+            return props
+        props = np.zeros((self.num_slots, self.spec_k), np.int32)
+        for slot in np.flatnonzero(self.pool.active):
+            slot = int(slot)
+            req = self.pool.request[slot]
+            ctx = list(np.asarray(req.prompt)) + self.pool.generated[slot]
+            props[slot] = self.draft.propose(ctx, self.spec_k)
+        return jnp.asarray(props)
+
+    def _decode_chunk(self, remaining: List[int]) -> None:
+        """One draft–verify round (replaces the fused k-tick chunk)."""
+        # the host drafter needs every emitted token, including the
+        # admit-time first token still riding on device — harvest first
+        self._harvest_pending()
+        if not self.pool.num_active:
+            return
+        props = self._propose()
+        S = self.spec_k + 1
+        if self.paged:
+            self._ensure_coverage(S)
+            if not self.pool.num_active:
+                return
+            self._page_steps += self.pages.pages_in_use
+            (self.tokens, self.cache, self.pos_d, self.active_d, self.gen_d,
+             T, A, m_eff) = self._round()(
+                self.params, self.cache, self.tokens, self.pos_d,
+                self.active_d, self.gen_d, self.maxgen_d, self.eos_d,
+                props, self._bt_dev())
+        else:
+            (self.tokens, self.cache, self.pos_d, self.active_d, self.gen_d,
+             T, A, m_eff) = self._round()(
+                self.params, self.cache, self.tokens, self.pos_d,
+                self.active_d, self.gen_d, self.maxgen_d, self.eos_d,
+                props)
+        self.decode_ticks += 1
+        self.spec_rounds += 1
+        T, A, m_eff = np.asarray(T), np.asarray(A), np.asarray(m_eff)
+        n_act = int(A[0].sum())        # every active row emits >= 1
+        self._occupied_slot_steps += n_act
+        self.spec_proposed += n_act * self.spec_k
+        # accepted DRAFT tokens exclude each row's guaranteed bonus token
+        self.spec_accepted += int(np.maximum(m_eff - 1, 0).sum())
+        for t in range(S):
+            for slot in np.flatnonzero(A[t]):
+                slot = int(slot)
+                if self.pool.active[slot]:
+                    self._consume(slot, int(T[t, slot]))
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of draft proposals the target accepted."""
+        if not self.spec_proposed:
+            return 0.0
+        return self.spec_accepted / self.spec_proposed
+
+    def stats(self) -> Dict[str, float]:
+        out = super().stats()
+        gen = out["generated_tokens"]
+        out.update({
+            "spec_rounds": self.spec_rounds,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "accept_rate": self.accept_rate,
+            "tokens_per_round": gen / max(self.spec_rounds, 1),
+        })
+        return out

@@ -401,3 +401,185 @@ def test_monitor_first_observation_blends_from_nominal():
     # trace-reported rate transitions remain an authoritative pin
     mon.set_rate(0, 0.25)
     assert mon.rates([0])[0] == 0.25
+
+
+# ---------------------------------------------------------------------------
+# paged KV migration on drain: zero re-prefill, byte-identical resume
+# ---------------------------------------------------------------------------
+from _hyp_compat import given, settings, st          # noqa: E402
+from repro.serving.engine import MigratedKV          # noqa: E402
+
+_PROGS = {}
+
+
+def _paged_prog(cfg, cache_len=24, page_size=4):
+    """One compiled program per (cache_len, page_size): the hypothesis
+    sweep below would otherwise recompile per example."""
+    key = (cache_len, page_size)
+    if key not in _PROGS:
+        _PROGS[key] = ServeProgram(cfg, cache_len=cache_len,
+                                   page_size=page_size)
+    return _PROGS[key]
+
+
+def _paged_engine(params, cfg, num_pages=None, cache_len=24, page_size=4,
+                  slots=2):
+    return ServeEngine(params, cfg, num_slots=slots, cache_len=cache_len,
+                       page_size=page_size, num_pages=num_pages,
+                       program=_paged_prog(cfg, cache_len, page_size))
+
+
+def _drain_and_resume(params, cfg, reqs, ticks, num_pages=None,
+                      migrate_kv=True):
+    """Run `ticks` ticks on engine A, drain, finish on engine B; return
+    ({rid: tokens}, engine_B) with drained continuations stitched."""
+    a = _paged_engine(params, cfg, num_pages)
+    for q in reqs:
+        a.submit(q)
+    for _ in range(ticks):
+        if a.scheduler.done:
+            break
+        a.tick()
+    drained = a.drain(migrate_kv=migrate_kv)
+    policy = ServingDrainReadmit()
+    conts = policy.readmit(drained)
+    b = _paged_engine(params, cfg, num_pages)
+    out = {f.rid: f.tokens for f in a.finished}
+    for f in b.run(conts):
+        s = policy.stitch(f)
+        out[s.rid] = s.tokens
+    return out, b, drained
+
+
+def test_drain_migrate_readmit_bit_identical(params):
+    """Drained KV pages re-installed on a fresh engine resume the exact
+    byte stream of an uninterrupted run — AND of the re-prefill path —
+    while skipping the prefix prefill entirely."""
+    cfg = _cfg()
+    reqs = lambda: _stream(4, cfg, seed=11, plens=(6, 9), gens=(10,))
+    ref = {f.rid: f.tokens
+           for f in _paged_engine(params, cfg).run(reqs())}
+
+    out_m, b_m, drained = _drain_and_resume(params, cfg, reqs(), ticks=3)
+    assert out_m == ref
+    harvested = [d for d in drained if d.kv is not None]
+    assert harvested, "drain point must catch live slots for this test"
+    for d in harvested:
+        assert isinstance(d.kv, MigratedKV)
+        assert d.kv.pos == len(np.asarray(d.request.prompt)) + len(d.emitted) - 1
+    assert b_m.migrated_admits == len(harvested)
+    assert b_m.migrated_tokens_saved == sum(d.kv.pos for d in harvested)
+
+    out_p, b_p, _ = _drain_and_resume(params, cfg, reqs(), ticks=3,
+                                      migrate_kv=False)
+    assert out_p == ref                      # re-prefill path: same bytes
+    assert b_p.migrated_admits == 0
+    # ... but the migrated engine never re-prefilled the drained prefixes
+    assert b_m.prefill_tokens < b_p.prefill_tokens
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(6, 12), st.integers(1, 9))
+def test_migration_identity_any_pool_any_drain_point(num_pages, ticks):
+    """Property: for ANY pool size (>= one max-length request) and ANY
+    drain point, drain -> migrate -> readmit reproduces the
+    uninterrupted stream byte-for-byte."""
+    cfg = _cfg()
+    params = _prop_params(cfg)
+    reqs = lambda: _stream(4, cfg, seed=13, plens=(5, 8), gens=(6, 10))
+    ref = _prop_ref(params, cfg, reqs)
+    out, b, _ = _drain_and_resume(params, cfg, reqs(), ticks=ticks,
+                                  num_pages=num_pages)
+    assert out == ref, (num_pages, ticks)
+
+
+_PROP = {}
+
+
+def _prop_params(cfg):
+    if "params" not in _PROP:
+        _PROP["params"] = MD.init_model(cfg, KEY)
+    return _PROP["params"]
+
+
+def _prop_ref(params, cfg, reqs):
+    if "ref" not in _PROP:
+        _PROP["ref"] = {f.rid: f.tokens
+                        for f in _paged_engine(params, cfg).run(reqs())}
+    return _PROP["ref"]
+
+
+def test_fleet_death_migrates_kv(params):
+    """A replica death on a paged fleet ships its harvested pages with
+    the continuations: outputs stay bit-identical to the failure-free
+    run and the re-admits skip the harvested prefixes' prefill."""
+    cfg = _cfg()
+    free = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                      page_size=4)
+    ref = {f.rid: f.tokens for f in free.run(_stream(10, cfg))}
+
+    trace = FailureTrace.single_failure(4, worker=1)
+    on = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                    page_size=4, trace=trace)
+    fins = on.run(_stream(10, cfg))
+    st = on.stats()
+    assert st["finished"] == 10
+    assert {f.rid: f.tokens for f in fins} == ref
+    assert st["migrated_admits"] >= 1
+    assert st["migrated_tokens_saved"] >= 1
+
+    off = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                     page_size=4, trace=trace, migrate_kv=False)
+    fins_off = off.run(_stream(10, cfg))
+    assert {f.rid: f.tokens for f in fins_off} == ref
+    st_off = off.stats()
+    assert st_off["migrated_admits"] == 0
+    # the savings the migrate gate in CI measures: strictly less prefill
+    assert st["prefill_tokens"] < st_off["prefill_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# hedged decode: SUSPECT replicas raced by a backup continuation
+# ---------------------------------------------------------------------------
+def test_hedged_decode_races_suspect_and_stays_identical(params):
+    """hedged_decode=True: instead of preemptively draining a SUSPECT
+    replica, the fleet launches backup continuations on a healthy one
+    through the cluster's `backup` role ledger and lets the copies race.
+    A hang that escalates to death: every hedged request is finished by
+    its backup, outputs bit-identical, nothing delivered twice."""
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(3, "hang", 2)])
+    fleet = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                       page_size=4, trace=trace, hedged_decode=True)
+    fins = fleet.run(_stream(10, cfg))
+    st = fleet.stats()
+    assert st["finished"] == 10                        # exactly once each
+    assert len({f.rid for f in fins}) == 10
+    assert st["hedges_launched"] >= 1
+    assert st["hedges_won_backup"] >= 1                # primary is hung
+    ref = {a.rid: a.tokens for a in free}
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+
+
+def test_hedged_decode_primary_recovery_keeps_identity(params):
+    """The hang recovers before the timeout: both copies run to the end;
+    whoever wins, each request is delivered exactly once and the bytes
+    match the failure-free run (the arbitration guarantee)."""
+    cfg = _cfg()
+    _, free = _run_fleet(params, cfg, _stream(10, cfg))
+    trace = FailureTrace([TraceEvent(3, "hang", 2),
+                          TraceEvent(4, "recover", 2)])
+    fleet = ServeFleet(params, cfg, replicas=3, num_slots=2, cache_len=24,
+                       page_size=4, trace=trace, hedged_decode=True)
+    fins = fleet.run(_stream(10, cfg))
+    st = fleet.stats()
+    assert st["finished"] == 10
+    assert len({f.rid for f in fins}) == 10
+    assert st["hedges_launched"] >= 1
+    assert (st["hedges_won_backup"] + st["hedges_won_primary"]
+            == st["hedges_launched"])
+    ref = {a.rid: a.tokens for a in free}
+    for f in fins:
+        assert f.tokens == ref[f.rid]

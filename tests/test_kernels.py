@@ -195,3 +195,91 @@ def test_nc_kernel_unbiased():
     mean = jnp.mean(samples, 0)
     err = jnp.abs(mean - x)
     assert bool(jnp.all(err <= jnp.abs(x) * 0.5 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode)
+# ---------------------------------------------------------------------------
+from repro.kernels.paged_attention import paged_attention  # noqa: E402
+
+PA_SHAPES = [
+    # B, Np, P, n_max, Hq, Hk, dh
+    (3, 16, 8, 4, 8, 2, 64),     # GQA group 4
+    (2, 16, 4, 6, 4, 4, 32),     # MHA, small pages
+    (1, 8, 16, 2, 8, 4, 64),     # single row, big pages
+    (4, 32, 8, 8, 8, 8, 64),     # many rows
+]
+
+
+def _paged_case(B, Np, P, n_max, Hq, Hk, dh, seed=0):
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv, kb, kp = jax.random.split(k, 5)
+    q = jax.random.normal(kq, (B, Hq, dh), jnp.float32)
+    k_pool = jax.random.normal(kk, (Np, P, Hk, dh), jnp.float32)
+    v_pool = jax.random.normal(kv, (Np, P, Hk, dh), jnp.float32)
+    # every row gets DISTINCT pages in scrambled order (the realistic
+    # fragmented-pool layout), never exceeding the pool
+    ids = np.stack([np.random.RandomState(seed + b).permutation(Np)[:n_max]
+                    for b in range(B)]).astype(np.int32)
+    pos = jax.random.randint(kp, (B,), 0, n_max * P).astype(jnp.int32)
+    del kb
+    return q, k_pool, v_pool, jnp.asarray(ids), pos
+
+
+@pytest.mark.parametrize("B,Np,P,n_max,Hq,Hk,dh", PA_SHAPES)
+def test_paged_attention_matches_ref(B, Np, P, n_max, Hq, Hk, dh):
+    q, kp, vp, bt, pos = _paged_case(B, Np, P, n_max, Hq, Hk, dh)
+    out = paged_attention(q, kp, vp, bt, pos, interpret=True)
+    ref = R.paged_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_paged_attention_ignores_stale_pages():
+    """Pages past a row's position — including whole unwritten pages that
+    are IN its block table — must contribute an exact softmax zero: the
+    output is bit-identical whether those pages hold garbage or +-1e9."""
+    B, Np, P, n_max, Hq, Hk, dh = 2, 12, 4, 5, 4, 2, 32
+    q, kp, vp, bt, _ = _paged_case(B, Np, P, n_max, Hq, Hk, dh, seed=3)
+    pos = jnp.asarray([P + 1, 2 * P - 1], jnp.int32)   # 2 pages live each
+    clean = paged_attention(q, kp, vp, bt, pos, interpret=True)
+    # poison every pool page NOT covered by a live prefix of some row
+    live = set()
+    for b in range(B):
+        for j in range(int(pos[b]) // P + 1):
+            live.add(int(bt[b, j]))
+    stale = np.asarray([p for p in range(Np) if p not in live])
+    kp2 = np.array(kp); vp2 = np.array(vp)
+    kp2[stale] = 1e9; vp2[stale] = -1e9
+    poisoned = paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), bt,
+                               pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(poisoned))
+    ref = R.paged_attention_ref(q, jnp.asarray(kp2), jnp.asarray(vp2), bt,
+                                pos)
+    np.testing.assert_allclose(np.asarray(poisoned), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_paged_attention_layout_invariance(seed):
+    """The same logical KV scattered under two different page assignments
+    produces bit-identical output — physical layout is invisible."""
+    B, Np, P, n_max, Hq, Hk, dh = 2, 10, 4, 3, 4, 2, 32
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    q = jnp.asarray(rng.randn(B, Hq, dh), jnp.float32)
+    kv_log = rng.randn(2, B, n_max, P, Hk, dh).astype(np.float32)
+    pos = jnp.asarray(rng.randint(0, n_max * P, size=B), jnp.int32)
+    outs = []
+    for layout_seed in (1, 2):
+        lr = np.random.RandomState(layout_seed)
+        ids = np.stack([lr.permutation(Np)[:n_max] for _ in range(B)])
+        kp = np.zeros((Np, P, Hk, dh), np.float32)
+        vp = np.zeros((Np, P, Hk, dh), np.float32)
+        for b in range(B):
+            kp[ids[b]] = kv_log[0, b]
+            vp[ids[b]] = kv_log[1, b]
+        outs.append(np.asarray(paged_attention(
+            q, jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(ids, np.int32), pos, interpret=True)))
+    np.testing.assert_array_equal(outs[0], outs[1])

@@ -237,3 +237,175 @@ def test_serve_cb_plan_lowers_and_runs():
         nxt, _ = compiled(params, cache, tok, pos, active)
         assert nxt.shape == (4, 1)
         assert int(nxt[2, 0]) == 0  # inactive slot passes its token through
+
+
+# ---------------------------------------------------------------------------
+# paged KV pool: attention_decode parity, engine bit-identity, preemption
+# ---------------------------------------------------------------------------
+PAGED_ARCHS = ["qwen3-0.6b", "qwen3-moe-30b-a3b", "phi-3-vision-4.2b",
+               "whisper-tiny", "zamba2-1.2b"]    # every family with a KV cache
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_decode_step_matches_dense(arch):
+    """decode_step through a block table over a shared page pool ==
+    decode_step over the dense per-slot cache, bit-for-bit, logits and
+    the KV written back — on every arch family that has KV to page."""
+    cfg = _cfg(arch)
+    params = MD.init_model(cfg, KEY)
+    B, S, P = 2, 6, 4
+    n_prefix = cfg.num_patches if cfg.arch_type == "vlm" else 0
+    p = S + n_prefix
+    npg = -(-(p + 2) // P)           # pages covering prefill + 2 decode steps
+    n_max = npg + 1
+    C = n_max * P
+    toks = jax.random.randint(KEY, (B, S + 2), 0, cfg.vocab_size)
+    ex = _extra(cfg, 1)
+
+    dense = MD.init_cache(cfg, B, C)
+    paged = MD.init_paged_cache(cfg, B, 2 * n_max, P)
+    # scrambled, DISJOINT page ids per slot (the pool allocator's
+    # invariant) — the fragmented-pool layout
+    ids = np.random.RandomState(7).permutation(
+        2 * n_max).reshape(B, n_max).astype(np.int32)
+    for b in range(B):
+        _, _, c1 = MD.forward(params, cfg, toks[b:b + 1, :S],
+                              extra_embeds=ex, return_cache=True,
+                              cache_len=C)
+        dense = MD.write_cache_slot(dense, c1, b)
+        _, _, c2 = MD.forward(params, cfg, toks[b:b + 1, :S],
+                              extra_embeds=ex, return_cache=True,
+                              cache_len=npg * P)
+        paged = MD.write_paged_cache(paged, c2, b,
+                                     jnp.asarray(ids[b, :npg]), cfg)
+    bt = jnp.asarray(ids)
+    pos = jnp.full((B,), p, jnp.int32)
+    for step in range(2):
+        tok = toks[:, S + step:S + step + 1]
+        l_d, dense = MD.decode_step(params, cfg, tok, pos, dense)
+        l_p, paged = MD.decode_step(params, cfg, tok, pos, paged,
+                                    block_tables=bt, logical_len=C)
+        np.testing.assert_array_equal(np.asarray(l_d), np.asarray(l_p))
+        pos = pos + 1
+
+
+def test_paged_decode_rejects_recurrent_cache():
+    cfg = _cfg("rwkv6-1.6b")
+    with pytest.raises(ValueError, match="no KV"):
+        MD.init_paged_cache(cfg, 2, 8, 4)
+    params = MD.init_model(cfg, KEY)
+    with pytest.raises(ValueError, match="no KV cache to page"):
+        ServeEngine(params, cfg, num_slots=2, cache_len=16, page_size=4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "zamba2-1.2b"])
+def test_paged_engine_matches_dense_engine(arch):
+    """A full mixed-length stream through the paged engine produces the
+    same tokens as the dense engine (page granularity is invisible)."""
+    cfg = _cfg(arch)
+    params = MD.init_model(cfg, KEY)
+
+    def stream():
+        rng = np.random.RandomState(4)
+        return [Request(rid=i,
+                        prompt=rng.randint(0, cfg.vocab_size,
+                                           size=int(rng.choice([5, 9]))),
+                        max_new_tokens=int(rng.choice([3, 7])))
+                for i in range(7)]
+
+    dense = ServeEngine(params, cfg, num_slots=3, cache_len=20)
+    ref = {f.rid: f.tokens for f in dense.run(stream())}
+    eng = ServeEngine(params, cfg, num_slots=3, cache_len=20, page_size=4)
+    fins = eng.run(stream())
+    assert len(fins) == 7
+    for f in fins:
+        assert f.tokens == ref[f.rid], f"rid {f.rid}"
+    st = eng.stats()
+    assert st["preemptions"] == 0      # ample pool: no pressure
+    assert 0.0 < st["pool_occupancy"] <= 1.0
+
+
+def test_paged_tight_pool_preempts_and_stays_identical():
+    """Undersized pool: the engine must preempt (newest slot first) into
+    prefix continuations when pages run dry, and the outputs must STILL
+    match the dense engine bit-for-bit — preemption changes scheduling,
+    never content."""
+    cfg = _cfg("qwen3-0.6b")
+    params = MD.init_model(cfg, KEY)
+
+    def stream():
+        rng = np.random.RandomState(5)
+        return [Request(rid=i,
+                        prompt=rng.randint(0, cfg.vocab_size, size=8),
+                        max_new_tokens=10) for i in range(6)]
+
+    dense = ServeEngine(params, cfg, num_slots=3, cache_len=20)
+    ref = {f.rid: f.tokens for f in dense.run(stream())}
+    # n_max = 5 pages; 9 pages cannot hold 3 slots at full length
+    eng = ServeEngine(params, cfg, num_slots=3, cache_len=20, page_size=4,
+                      num_pages=9)
+    fins = eng.run(stream())
+    st = eng.stats()
+    assert st["preemptions"] >= 1
+    assert len(fins) == 6
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+    # a tight pool is a BUSY pool — that is the point of paging
+    assert st["pool_occupancy"] >= 0.5
+
+
+def test_paged_pool_too_small_raises():
+    cfg = _cfg("qwen3-0.6b")
+    params = MD.init_model(cfg, KEY)
+    with pytest.raises(ValueError, match="num_pages"):
+        ServeEngine(params, cfg, num_slots=2, cache_len=20, page_size=4,
+                    num_pages=4)    # one max-length request needs 5
+
+
+def test_cancel_frees_slot_and_pages():
+    """cancel() on an active request frees its slot AND its pages; on a
+    queued request it just drops it.  Survivors finish identically."""
+    cfg = _cfg("qwen3-0.6b")
+    params = MD.init_model(cfg, KEY)
+
+    def stream():
+        rng = np.random.RandomState(6)
+        return [Request(rid=i,
+                        prompt=rng.randint(0, cfg.vocab_size, size=6),
+                        max_new_tokens=8) for i in range(4)]
+
+    dense = ServeEngine(params, cfg, num_slots=2, cache_len=16)
+    ref = {f.rid: f.tokens for f in dense.run(stream())}
+
+    eng = ServeEngine(params, cfg, num_slots=2, cache_len=16, page_size=4)
+    for q in stream():
+        eng.submit(q)
+    for _ in range(3):          # rid 0,1 active; 2,3 queued
+        eng.tick()
+    assert eng.cancel(1)        # active
+    assert eng.cancel(3)        # queued
+    assert not eng.cancel(99)   # unknown rid
+    while not eng.scheduler.done:
+        eng.tick()
+    fins = {f.rid: f.tokens for f in eng.finished}
+    assert set(fins) == {0, 2}
+    for rid, toks in fins.items():
+        assert toks == ref[rid]
+    assert eng.pages.num_free == eng.num_pages   # every page returned
+
+
+def test_page_pool_unit():
+    from repro.serving import PagePool
+    pool = PagePool(6, page_size=4)
+    assert pool.pages_for(0) == 0 and pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1 and pool.pages_for(5) == 2
+    a = pool.alloc(0, 3)
+    assert a == [0, 1, 2] and pool.num_free == 3 and pool.pages_in_use == 3
+    b = pool.alloc(1, 2)
+    assert b == [3, 4]
+    assert pool.alloc(2, 2) is None       # only one page left: refuse whole
+    assert pool.num_free == 1             # ... and nothing leaked
+    assert pool.release(0) == [0, 1, 2]
+    assert pool.num_free == 4
+    c = pool.alloc(2, 4)
+    assert c == [0, 1, 2, 5]              # lowest-id-first, deterministic

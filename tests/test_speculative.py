@@ -1,0 +1,216 @@
+"""Speculative draft-verify decoding: one wide `verify_step` dispatch per
+round replaces up to spec_k+1 sequential pool ticks, and greedy
+accept/rollback keeps the emitted stream BIT-IDENTICAL to plain decode —
+for the model-free n-gram lookup draft, a config-zoo cross-model draft
+(qwen3-0.6b proposing for qwen3-1.7b), dense and paged caches, and
+across drain/migrate/readmit."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.elastic import ServingDrainReadmit
+from repro.models import model as MD
+from repro.serving import (LookupDraft, ModelDraft, Request, ServeEngine,
+                           SpecDecodeEngine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(arch="qwen3-0.6b"):
+    return get_config(arch, smoke=True).with_(param_dtype="float32",
+                                              compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_model(_cfg(), KEY)
+
+
+def _stream(cfg, n=6, seed=0, plens=(5, 8), gens=(4, 9)):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=int(rng.choice(plens))),
+                    max_new_tokens=int(rng.choice(gens)))
+            for i in range(n)]
+
+
+def _ref(params, cfg, reqs, cache_len=28):
+    eng = ServeEngine(params, cfg, num_slots=2, cache_len=cache_len)
+    return {f.rid: f.tokens for f in eng.run(reqs)}
+
+
+# ---------------------------------------------------------------------------
+# output identity: speculation changes the dispatch count, never the bytes
+# ---------------------------------------------------------------------------
+def test_lookup_spec_matches_plain(params):
+    cfg = _cfg()
+    ref = _ref(params, cfg, _stream(cfg))
+    eng = SpecDecodeEngine(params, cfg, num_slots=2, cache_len=28,
+                           spec_k=3)
+    fins = eng.run(_stream(cfg))
+    assert len(fins) == 6
+    for f in fins:
+        assert f.tokens == ref[f.rid], f"rid {f.rid}"
+    st = eng.stats()
+    assert st["spec_rounds"] > 0
+    assert 0.0 <= st["accept_rate"] <= 1.0
+    # every round emits at least the target's own token
+    assert st["generated_tokens"] >= st["spec_rounds"]
+
+
+def test_lookup_spec_paged_matches_plain(params):
+    """Speculation composes with the paged pool: the verify dispatch
+    reads/writes KV through block tables and the stream is unchanged."""
+    cfg = _cfg()
+    ref = _ref(params, cfg, _stream(cfg, seed=2))
+    eng = SpecDecodeEngine(params, cfg, num_slots=2, cache_len=28,
+                           spec_k=3, page_size=4)
+    fins = eng.run(_stream(cfg, seed=2))
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+    st = eng.stats()
+    assert st["spec_rounds"] > 0 and st["pool_occupancy"] > 0.0
+
+
+def test_model_draft_cross_model_matches_plain():
+    """The config-zoo pairing: qwen3-0.6b drafts for qwen3-1.7b.  The
+    draft runs its own cache and scan; only its PROPOSALS reach the
+    target, so target outputs are bit-identical to decoding without it."""
+    tcfg, dcfg = _cfg("qwen3-1.7b"), _cfg("qwen3-0.6b")
+    tparams = MD.init_model(tcfg, KEY)
+    dparams = MD.init_model(dcfg, jax.random.PRNGKey(1))
+    ref = _ref(tparams, tcfg, _stream(tcfg, n=4, seed=3))
+    eng = SpecDecodeEngine(tparams, tcfg, num_slots=2, cache_len=28,
+                           spec_k=3, draft=ModelDraft(dparams, dcfg))
+    fins = eng.run(_stream(tcfg, n=4, seed=3))
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+    st = eng.stats()
+    assert st["spec_rounds"] > 0 and 0.0 <= st["accept_rate"] <= 1.0
+
+
+def test_self_draft_accepts_everything(params):
+    """A draft that IS the target agrees with every proposal: accept
+    rate exactly 1.0, and each request of budget 1+2(k+1) retires in
+    exactly 2 rounds — the speedup mechanism, pinned deterministically."""
+    cfg = _cfg()
+    reqs = [Request(rid=i, prompt=np.full(6, i + 3, np.int32),
+                    max_new_tokens=9) for i in range(2)]
+    ref = _ref(params, cfg, [Request(rid=r.rid, prompt=r.prompt.copy(),
+                                     max_new_tokens=9) for r in reqs])
+    eng = SpecDecodeEngine(params, cfg, num_slots=2, cache_len=28,
+                           spec_k=3, draft=ModelDraft(params, cfg))
+    fins = eng.run(reqs)
+    for f in fins:
+        assert f.tokens == ref[f.rid]
+    st = eng.stats()
+    assert st["accept_rate"] == pytest.approx(1.0)
+    assert st["spec_rounds"] == 2            # 2 slots x 2 rounds, batched
+    assert st["tokens_per_round"] == pytest.approx(9.0)  # (2x9 toks)/2
+
+
+def test_spec_eos_early_stop_matches_plain(params):
+    """EOS inside an accepted block truncates the emission at the EOS
+    token exactly like sequential decode would."""
+    cfg = _cfg()
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab_size, size=7)
+    base = _ref(params, cfg, [Request(rid=0, prompt=prompt.copy(),
+                                      max_new_tokens=10)])[0]
+    eos = base[3]      # stop mid-stream, inside a spec block
+    ref = _ref(params, cfg, [Request(rid=0, prompt=prompt.copy(),
+                                     max_new_tokens=10, eos_id=eos)])
+    eng = SpecDecodeEngine(params, cfg, num_slots=2, cache_len=28,
+                           spec_k=3)
+    [fin] = eng.run([Request(rid=0, prompt=prompt.copy(),
+                             max_new_tokens=10, eos_id=eos)])
+    assert fin.tokens == ref[0]
+    assert fin.finish_reason == "eos"
+
+
+def test_spec_drain_migrate_readmit_identity(params):
+    """Speculation composes with KV migration: drain a paged spec engine
+    mid-stream, re-admit the harvested pages on a second spec engine,
+    stitched outputs match the uninterrupted run byte-for-byte."""
+    cfg = _cfg()
+
+    def mk():
+        return SpecDecodeEngine(params, cfg, num_slots=2, cache_len=28,
+                                spec_k=3, page_size=4)
+
+    def reqs():
+        return _stream(cfg, n=4, seed=7, plens=(6,), gens=(10,))
+
+    ref = {f.rid: f.tokens for f in mk().run(reqs())}
+    assert ref == _ref(params, cfg, reqs())   # spec engine is the plain bytes
+
+    a = mk()
+    for q in reqs():
+        a.submit(q)
+    for _ in range(3):
+        a.tick()
+    drained = a.drain()
+    assert any(d.kv is not None for d in drained)
+    policy = ServingDrainReadmit()
+    conts = policy.readmit(drained)
+    b = mk()
+    out = {f.rid: f.tokens for f in a.finished}
+    for f in b.run(conts):
+        s = policy.stitch(f)
+        out[s.rid] = s.tokens
+    assert out == ref
+    assert b.migrated_admits >= 1
+
+
+# ---------------------------------------------------------------------------
+# the lookup draft itself (host-side, model-free)
+# ---------------------------------------------------------------------------
+def test_lookup_draft_ngram_extension():
+    d = LookupDraft(max_n=3)
+    # context repeats "7 8 9": the trigram match extends the loop
+    ctx = [1, 7, 8, 9, 2, 7, 8, 9, 5, 7, 8]
+    # trigram (7,8) -> 9, then the MOST RECENT earlier occurrence of the
+    # rolling suffix wins: (7,8,9) last followed 5, then (8,9,5) -> 7
+    assert d.propose(ctx, 3) == [9, 5, 7]
+    # no history at all: repeat-last fallback
+    assert d.propose([4], 2) == [4, 4]
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_spec_rejects_recurrent_arch():
+    cfg = _cfg("rwkv6-1.6b")
+    params = MD.init_model(cfg, KEY)
+    with pytest.raises(ValueError, match="pure-attention"):
+        SpecDecodeEngine(params, cfg, num_slots=2, cache_len=24)
+
+
+def test_spec_rejects_bad_k(params):
+    with pytest.raises(ValueError, match="spec_k"):
+        SpecDecodeEngine(params, _cfg(), num_slots=2, cache_len=24,
+                         spec_k=0)
+
+
+def test_spec_rejects_vocab_mismatch(params):
+    cfg = _cfg()
+    dcfg = cfg.with_(vocab_size=cfg.vocab_size // 2)
+    dparams = MD.init_model(dcfg, KEY)
+    with pytest.raises(ValueError, match="vocab"):
+        SpecDecodeEngine(params, cfg, num_slots=2, cache_len=24,
+                         draft=ModelDraft(dparams, dcfg))
+
+
+def test_spec_reserves_verify_headroom(params):
+    """submit() must reserve spec_k cache positions past the budget —
+    verify writes KV at pos..pos+spec_k even on a 1-token emission."""
+    cfg = _cfg()
+    eng = SpecDecodeEngine(params, cfg, num_slots=1, cache_len=16,
+                           spec_k=3)
+    eng.submit(Request(rid=0, prompt=np.zeros(6, np.int32),
+                       max_new_tokens=7))        # 6 + 7 = 13 <= 16 - 3
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        eng.submit(Request(rid=1, prompt=np.zeros(6, np.int32),
+                           max_new_tokens=8))    # 14 > 13
